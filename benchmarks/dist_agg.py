@@ -1,0 +1,96 @@
+"""Beyond-paper: the paper's aggregation (§5.4 t_agg) mapped onto the
+production TPU mesh — distributed N-way weighted fusion of full-size model
+updates, lowered + compiled on the 16x16 (256-chip) mesh with
+ShapeDtypeStruct stand-ins, exactly like the model dry-run.
+
+Fusion is coordinate-wise, so sharding the flattened update over ALL mesh
+axes makes it embarrassingly parallel: the lowered HLO must contain ZERO
+collectives (asserted), and t_agg on the mesh is the per-chip HBM roofline:
+
+    t_agg_tpu = K x P x 4 B / (chips x 819 GB/s)   (K updates, P params)
+
+compared against the paper's CPU containers (t_pair = 3·M/10 GB/s on 2
+vCPU, t_agg = N·t_pair/(C·N_agg)). This is the §5.4 'GPU aggregation'
+row the paper gestures at, made concrete for TPU v5e.
+
+CSV: arch,params,k_updates,bytes_per_chip,t_agg_tpu_ms,t_agg_cpu_1000p_s,
+     collectives_in_hlo
+"""
+import os
+
+if __name__ == "__main__":  # only this module's own main forces 512 devs
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+
+HBM_BW = 819e9  # bytes/s per v5e chip
+CPU_EFF_BW = 10e9  # the strategy sim's 2-vCPU fusion bandwidth
+
+
+def run_one(arch: str, k: int = 8):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.launch.dryrun import collective_bytes
+    from repro.launch.mesh import make_production_mesh, n_chips
+    from repro.models import model as M
+
+    cfg = configs.get_config(arch)
+    params = M.n_params(cfg)
+    mesh = make_production_mesh()
+    chips = n_chips(mesh)
+    flat = (chips * ((params + chips - 1) // chips),)  # pad to shard evenly
+
+    sh = NamedSharding(mesh, P(("data", "model")))
+    w = jnp.ones((k,), jnp.float32) / k
+
+    def fuse(stack, weights):  # (K, P) x (K,) -> (P,)
+        return jnp.einsum("k,kp->p", weights, stack)
+
+    stack = jax.ShapeDtypeStruct((k,) + flat, jnp.float32)
+    lowered = jax.jit(
+        fuse,
+        in_shardings=(NamedSharding(mesh, P(None, ("data", "model"))), None),
+        out_shardings=sh,
+    ).lower(stack, jax.ShapeDtypeStruct((k,), jnp.float32))
+    compiled = lowered.compile()
+    raw, kinds, counts, tpu = collective_bytes(compiled.as_text())
+
+    bytes_per_chip = (k + 1) * flat[0] * 4 / chips  # K reads + 1 write
+    t_tpu_ms = bytes_per_chip / HBM_BW * 1e3
+    # paper-style CPU aggregation of 1000 updates, one 2-core container
+    t_pair_cpu = 3 * params * 4 / CPU_EFF_BW
+    t_cpu_1000 = 1000 * t_pair_cpu / 2
+    # scale the roofline to the paper's 1000-party round (linear in K)
+    t_tpu_1000_s = t_tpu_ms / 1e3 * (1000 + 1) / (k + 1)
+    return {
+        "arch": arch,
+        "params": params,
+        "k": k,
+        "bytes_per_chip": int(bytes_per_chip),
+        "t_agg_tpu_ms": round(t_tpu_ms, 3),
+        "t_agg_tpu_1000p_s": round(t_tpu_1000_s, 3),
+        "t_agg_cpu_1000p_s": round(t_cpu_1000, 1),
+        "collectives_in_hlo": sum(counts.values()),
+    }
+
+
+ARCHS = ["qwen3-0.6b", "qwen2.5-14b", "recurrentgemma-9b",
+         "llama-3.2-vision-90b"]
+
+
+def main():
+    print("arch,params,k_updates,bytes_per_chip,t_agg_tpu_ms,"
+          "t_agg_tpu_1000p_s,t_agg_cpu_1000p_s,collectives_in_hlo")
+    for arch in ARCHS:
+        r = run_one(arch)
+        assert r["collectives_in_hlo"] == 0, (
+            f"{arch}: coordinate-wise fusion must lower collective-free, "
+            f"got {r['collectives_in_hlo']}")
+        print(",".join(str(v) for v in r.values()), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Aggregation-kernel microbenchmarks. On this CPU container the Pallas
+kernels run in interpret mode (not representative of TPU); the jnp reference
+path gives the CPU-reference throughput, and the derived column projects
+TPU v5e time from the bandwidth-bound roofline (bytes / 819 GB/s), which is
+what t_pair on the target would be.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.fused_agg import fused_agg
+from repro.launch.mesh import V5E
+
+CASES = [(8, 1 << 20), (32, 1 << 20), (8, 1 << 22)]
+# interpret mode executes the kernel body per grid step in Python — keep the
+# validation-timing cases small (throughput there is meaningless anyway)
+INTERPRET_CASES = [(8, 1 << 16), (32, 1 << 16)]
+
+
+def timeit(fn, *args, trials=3):
+    fn(*args)  # warmup/compile
+    ts = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6  # us
+
+
+def main():
+    print("name,us_per_call,derived")
+    for k, n in CASES:
+        u = jax.random.normal(jax.random.PRNGKey(0), (k, n), jnp.float32)
+        w = jnp.full((k,), 1.0 / k, jnp.float32)
+        bytes_moved = (k * n + n) * 4
+        v5e_us = bytes_moved / V5E.hbm_bw * 1e6
+        us_ref = timeit(jax.jit(ref.fused_agg_ref), u, w)
+        print(f"fused_agg_ref_cpu_k{k}_n{n},{us_ref:.1f},"
+              f"tpu_roofline_us={v5e_us:.1f}", flush=True)
+    for k, n in INTERPRET_CASES:
+        u = jax.random.normal(jax.random.PRNGKey(0), (k, n), jnp.float32)
+        w = jnp.full((k,), 1.0 / k, jnp.float32)
+        us_pal = timeit(lambda u, w: fused_agg(u, w, interpret=True), u, w,
+                        trials=1)
+        print(f"fused_agg_pallas_interpret_k{k}_n{n},{us_pal:.1f},"
+              f"validation_only", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Paper Figs. 3 & 4: the two properties JIT prediction rests on, measured
+with REAL JAX training on this machine (not simulated):
+
+  Fig. 3 — periodicity: minibatch & epoch times are ~constant across epochs
+           (coefficient of variation reported).
+  Fig. 4 — linearity: minibatch time vs batch size, epoch time vs dataset
+           size (least-squares R^2 reported).
+
+CSV: metric,x,seconds  plus summary lines periodicity_cv,... linearity_r2,...
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import SyntheticLM, SyntheticLMConfig, Loader
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def _setup(batch_size: int, n_sequences: int, seed=0):
+    cfg = configs.get_config("qwen3-0.6b").reduced(
+        num_layers=2, d_model=128, vocab_size=256
+    )
+    data_cfg = SyntheticLMConfig(vocab_size=cfg.vocab_size, seq_len=64)
+    lm = SyntheticLM(data_cfg, seed=seed)
+    ds = lm.make_dataset(np.full(10, 0.1), n_sequences, seed=seed)
+    opt = adamw(1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    params = M.init(cfg, jax.random.PRNGKey(seed))
+    return cfg, ds, opt, step, params
+
+
+def measure_epochs(n_epochs=5, batch_size=16, n_sequences=128):
+    cfg, ds, opt, step, params = _setup(batch_size, n_sequences)
+    loader = Loader(ds, batch_size)
+    opt_state = opt.init(params)
+    mb_times, ep_times = [], []
+    for ep in range(n_epochs + 1):  # first epoch = warmup/compile
+        t_ep = time.perf_counter()
+        for batch in loader.epoch():
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, _ = step(params, opt_state, b)
+            jax.block_until_ready(jax.tree.leaves(params)[0])
+            if ep > 0:
+                mb_times.append(time.perf_counter() - t0)
+        if ep > 0:
+            ep_times.append(time.perf_counter() - t_ep)
+    return np.asarray(mb_times), np.asarray(ep_times)
+
+
+def measure_linearity_batch(batch_sizes=(4, 8, 16, 32)):
+    out = []
+    for bs in batch_sizes:
+        cfg, ds, opt, step, params = _setup(bs, 64)
+        loader = Loader(ds, bs)
+        opt_state = opt.init(params)
+        batch = {k: jnp.asarray(v)
+                 for k, v in next(iter(loader.epoch())).items()}
+        step(params, opt_state, batch)  # compile
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            p2, o2, _ = step(params, opt_state, batch)
+            jax.block_until_ready(jax.tree.leaves(p2)[0])
+            ts.append(time.perf_counter() - t0)
+        out.append((bs, float(np.median(ts))))
+    return out
+
+
+def measure_linearity_dataset(sizes=(32, 64, 128, 256), batch_size=16):
+    out = []
+    for n in sizes:
+        mb, ep = measure_epochs(n_epochs=1, batch_size=batch_size,
+                                n_sequences=n)
+        out.append((n, float(ep[0])))
+    return out
+
+
+def r2(xs, ys):
+    xs, ys = np.asarray(xs, float), np.asarray(ys, float)
+    a, b = np.polyfit(xs, ys, 1)
+    pred = a * xs + b
+    ss_res = ((ys - pred) ** 2).sum()
+    ss_tot = ((ys - ys.mean()) ** 2).sum()
+    return 1.0 - ss_res / max(ss_tot, 1e-12)
+
+
+def main():
+    print("metric,x,seconds")
+    mb, ep = measure_epochs()
+    for i, t in enumerate(ep):
+        print(f"epoch_time,{i},{t:.4f}")
+    cv_mb = float(mb.std() / mb.mean())
+    cv_ep = float(ep.std() / ep.mean())
+    lin_b = measure_linearity_batch()
+    for bs, t in lin_b:
+        print(f"minibatch_vs_batchsize,{bs},{t:.5f}")
+    lin_d = measure_linearity_dataset()
+    for n, t in lin_d:
+        print(f"epoch_vs_datasetsize,{n},{t:.4f}")
+    print(f"periodicity_cv_minibatch,,{cv_mb:.4f}")
+    print(f"periodicity_cv_epoch,,{cv_ep:.4f}")
+    print(f"linearity_r2_batchsize,,{r2(*zip(*lin_b)):.4f}")
+    print(f"linearity_r2_datasetsize,,{r2(*zip(*lin_d)):.4f}")
+
+
+if __name__ == "__main__":
+    main()

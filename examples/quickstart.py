@@ -1,0 +1,58 @@
+"""Quickstart: a 5-party federated job with REAL JAX training at the
+parties, real Pallas-kernel fusion at the aggregator, and JIT-scheduled
+aggregation — all on CPU in ~a minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro import configs
+from repro.core.jobspec import FLJobSpec, PartySpec
+from repro.fl.job import FLJobRuntime
+from repro.models import model as M
+
+configs.load_all()
+
+
+def main():
+    # a tiny dense model (same family as qwen3) so CPU rounds are fast
+    cfg = configs.get_config("qwen3-0.6b").reduced(
+        num_layers=2, d_model=128, vocab_size=256
+    )
+    model_bytes = M.n_params(cfg) * 4
+
+    n_parties = 5
+    spec = FLJobSpec(
+        job_id="quickstart",
+        model_arch=cfg.name,
+        model_bytes=model_bytes,
+        aggregation_algorithm="fedavg",
+        rounds=8,
+        lr=0.05,
+        batch_size=8,
+        parties={f"p{i}": PartySpec(f"p{i}") for i in range(n_parties)},
+    )
+
+    runtime = FLJobRuntime(
+        cfg, spec, n_sequences=160, heterogeneous=True, seed=0
+    )
+    print(f"model: {cfg.name} ({M.n_params(cfg)/1e6:.1f}M params)")
+    print(f"initial eval loss: {runtime.eval_loss():.4f}")
+    records = runtime.run(verbose=True)
+
+    first, last = records[0], records[-1]
+    print("\n--- summary ---")
+    print(f"loss: {first.global_loss:.4f} -> {last.global_loss:.4f}")
+    lat = sum(r.latency for r in records) / len(records)
+    cs = sum(r.container_seconds for r in records)
+    print(f"mean aggregation latency: {lat:.3f}s")
+    print(f"total aggregator container-seconds (JIT): {cs:.2f}")
+    # what always-on would have cost: the whole job duration
+    wall = sum(max(r.arrivals.values()) + r.latency for r in records)
+    print(f"always-on would have billed ~{wall:.2f}s "
+          f"({100*(1-cs/wall):.1f}% saved by JIT)")
+    assert last.global_loss < first.global_loss, "federated training converged"
+
+
+if __name__ == "__main__":
+    main()

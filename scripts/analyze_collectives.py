@@ -1,0 +1,88 @@
+"""Hillclimb profiling aid: lower+compile one (arch, shape, mesh, profile)
+and print the collective ops grouped by computation with trip multipliers,
+largest first — the dry-run 'profile' for §Perf hypothesis forming.
+
+  PYTHONPATH=src python scripts/analyze_collectives.py llama-3.2-vision-90b train_4k [optimized]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re
+import sys
+from collections import defaultdict
+
+from repro.launch.dryrun import (_COLLECTIVES, _COMP_RE, _SHAPE_RE, _TRIP_RE,
+                                 _WHILE_RE, _shape_bytes, run_one)
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    profile = sys.argv[3] if len(sys.argv) > 3 else "baseline"
+
+    import jax
+    from repro import configs
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch import sharding as shd
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.sharding_ctx import activation_sharding
+
+    cfg = configs.get_config(arch)
+    mesh = make_production_mesh(multi_pod=False)
+    fn, args, in_shardings, donate = steps_mod.build(
+        cfg, INPUT_SHAPES[shape], mesh, profile=profile)
+    rules = shd.activation_rules(mesh, cfg.sequence_parallel)
+    with activation_sharding(mesh, rules, profile=profile):
+        lowered = jax.jit(fn, in_shardings=in_shardings,
+                          donate_argnums=donate).lower(*args)
+    hlo = lowered.compile().as_text()
+
+    comp = "__top__"
+    per_comp = defaultdict(lambda: defaultdict(lambda: [0, 0]))
+    edges = {}
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        m = _COMP_RE.match(raw) if raw and not raw.startswith(" ") else None
+        if m:
+            comp = m.group(1)
+            continue
+        if not line.startswith(("%", "ROOT")):
+            continue
+        if " while(" in line:
+            mw = _WHILE_RE.search(line)
+            if mw:
+                mt = _TRIP_RE.search(line)
+                edges[mw.group(1)] = (comp, int(mt.group(1)) if mt else 1)
+            continue
+        for kind in _COLLECTIVES:
+            if re.search(rf"= [^=]*\b{kind}(-start)?\(", line):
+                lhs = line.split("=", 1)[1]
+                toks = _SHAPE_RE.findall(lhs[:lhs.find(kind)])
+                nb = sum(_shape_bytes(t) for t in toks)
+                shp = toks[0] if toks else "?"
+                agg = per_comp[comp][(kind, shp)]
+                agg[0] += nb
+                agg[1] += 1
+                break
+
+    def mult(c, depth=0):
+        if depth > 16 or c not in edges:
+            return 1
+        p, t = edges[c]
+        return t * mult(p, depth + 1)
+
+    rows = []
+    for c, kinds in per_comp.items():
+        m = mult(c)
+        for (kind, shp), (nb, cnt) in kinds.items():
+            rows.append((nb * m, kind, shp, cnt, m, c))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/device: {total:.3e}")
+    print(f"{'bytes':>12} {'kind':>18} {'shape':>28} {'cnt':>4} {'trip':>5}  comp")
+    for nb, kind, shp, cnt, m, c in rows[:40]:
+        print(f"{nb:12.3e} {kind:>18} {shp:>28} {cnt:4d} {m:5d}  {c[:60]}")
+
+
+if __name__ == "__main__":
+    main()

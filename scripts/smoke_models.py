@@ -1,0 +1,61 @@
+"""Dev smoke: reduced variant of every arch — forward, loss+grad, prefill,
+decode — on CPU. Not part of the test suite (tests/ has the real version)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+
+configs.load_all()
+
+
+def batch_for(cfg, b=2, s=32):
+    key = jax.random.PRNGKey(0)
+    if cfg.num_codebooks:
+        tok = jax.random.randint(key, (b, s, cfg.num_codebooks), 0, cfg.vocab_size)
+    else:
+        tok = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            key, (b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+def main():
+    names = sys.argv[1:] or configs.ARCH_IDS
+    for name in names:
+        cfg = configs.get_config(name).reduced()
+        b, s = 2, 32
+        batch = batch_for(cfg, b, s)
+        params = M.init(cfg, jax.random.PRNGKey(1))
+        loss, metrics = M.loss_fn(cfg, params, batch)
+        grads = jax.grad(lambda p: M.loss_fn(cfg, p, batch)[0])(params)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        # prefill + decode
+        logits_p, cache = M.prefill(
+            cfg, params, batch["tokens"], image_embeds=batch.get("image_embeds")
+        )
+        tok1 = batch["tokens"][:, :1]
+        logits_d, cache = M.decode_step(cfg, params, cache, tok1)
+        ok = bool(
+            np.isfinite(float(loss))
+            and np.isfinite(float(gnorm))
+            and np.all(np.isfinite(np.asarray(logits_d, np.float32)))
+        )
+        print(
+            f"{name:28s} loss={float(loss):8.4f} gnorm={float(gnorm):10.4f} "
+            f"logits={tuple(logits_p.shape)} decode={tuple(logits_d.shape)} "
+            f"{'OK' if ok else 'FAIL'}"
+        )
+        assert ok, name
+
+
+if __name__ == "__main__":
+    main()

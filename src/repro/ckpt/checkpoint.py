@@ -1,0 +1,90 @@
+"""Pytree checkpointing to .npz (atomic rename), with a step index.
+
+Used for: global-model snapshots per FL round, optimizer state in the
+training driver, and as the stable-storage half of the serverless
+aggregator's load/save cycle (core/cluster.py charges the TIME; this module
+provides the actual mechanism for the real runtime).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            out[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Pytree) -> Path:
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    structure = jax.tree_util.tree_structure(tree)
+    final = d / f"ckpt_{step:08d}.npz"
+    with tempfile.NamedTemporaryFile(dir=d, suffix=".tmp", delete=False) as f:
+        np.savez(f, __treedef__=np.frombuffer(
+            str(structure).encode(), dtype=np.uint8), **flat)
+        tmp = f.name
+    os.replace(tmp, final)  # atomic
+    (d / "LATEST").write_text(str(step))
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    p = Path(directory) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def load_checkpoint(directory: str | Path, step: Optional[int] = None,
+                    like: Optional[Pytree] = None) -> Tuple[int, Pytree]:
+    """Load a checkpoint. If `like` is given, the result mirrors its pytree
+    structure (and bf16 leaves are restored); otherwise a flat dict keyed by
+    path strings is returned."""
+    d = Path(directory)
+    if step is None:
+        step = latest_step(d)
+        assert step is not None, f"no checkpoints in {d}"
+    with np.load(d / f"ckpt_{step:08d}.npz") as z:
+        flat = {k: z[k] for k in z.files if k != "__treedef__"}
+    restored: Dict[str, np.ndarray] = {}
+    for k, v in flat.items():
+        if k.endswith("::bf16"):
+            restored[k[:-6]] = v.view(jax.numpy.bfloat16)
+        else:
+            restored[k] = v
+    if like is None:
+        return step, restored
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+    flat_like, treedef = leaves_paths
+    new_leaves = []
+    for path, leaf in flat_like:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = restored[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return step, jax.tree_util.tree_unflatten(treedef, new_leaves)

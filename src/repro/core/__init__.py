@@ -1,0 +1,35 @@
+"""The paper's primary contribution: just-in-time aggregation scheduling.
+
+  jobspec     — FL job + party specifications (§5.1/§5.2)
+  prediction  — periodicity/linearity update-arrival prediction (§4, §5.3)
+  estimator   — t_pair measurement + t_agg estimation (§5.4)
+  scheduler   — Fig. 6 JIT scheduler: timers + priorities + preemption (§5.5)
+  strategies  — eager-AO / eager-serverless / batched / lazy / JIT (§3)
+  events      — discrete-event simulation core
+  cluster     — simulated k8s cluster with overheads + preemption
+  queue       — durable message queue (Kafka/object-store stand-in)
+  metrics     — aggregation latency, container-seconds, projected cost (§6.2)
+"""
+from repro.core.estimator import (  # noqa: F401
+    AggregationEstimator,
+    AggregatorResources,
+    measure_t_pair,
+    usable_cores,
+)
+from repro.core.events import Simulator  # noqa: F401
+from repro.core.cluster import Cluster, ClusterConfig  # noqa: F401
+from repro.core.jobspec import FLJobSpec, PartySpec  # noqa: F401
+from repro.core.metrics import JobMetrics, savings  # noqa: F401
+from repro.core.prediction import (  # noqa: F401
+    LinearEstimator,
+    PeriodicTracker,
+    UpdatePredictor,
+)
+from repro.core.queue import MessageQueue  # noqa: F401
+from repro.core.scheduler import JITScheduler  # noqa: F401
+from repro.core.strategies import (  # noqa: F401
+    STRATEGIES,
+    ArrivalModel,
+    StrategyRun,
+    run_strategy,
+)

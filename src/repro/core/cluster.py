@@ -1,0 +1,192 @@
+"""Simulated datacenter cluster: container pool with deploy / state-load /
+checkpoint overheads, priority scheduling every delta seconds, and
+preemption by checkpointing partial state (§5.5).
+
+Container-seconds accounting follows §6.2: every second a container is
+alive — including deployment, state loading and checkpointing — is billed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional
+
+from repro.core.events import EventHandle, Simulator
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    capacity: int = 64  # max concurrent containers
+    # Ray-executor-style overheads (the paper runs aggregation as Ray
+    # serverless functions on a pre-provisioned k8s cluster, §6.1): task
+    # launch is sub-second; state load/checkpoint move the running
+    # aggregate through the object store and scale with model size (set
+    # them per-workload: model_bytes / B_dc).
+    deploy_overhead_s: float = 0.1  # schedule + start a Ray executor task
+    state_load_s: float = 0.05  # load aggregator state from object store
+    checkpoint_s: float = 0.05  # persist state at shutdown/preemption
+    delta_s: float = 1.0  # scheduling tick (paper's delta)
+    price_per_container_s: float = 0.0002692  # US$ (Azure ACI, paper Fig. 9)
+
+
+@dataclasses.dataclass
+class Task:
+    """A unit of aggregation work submitted to the cluster."""
+
+    task_id: int
+    job_id: str
+    priority: float  # smaller = more urgent (JIT: t_rnd - t_agg)
+    work_s: float  # pure compute seconds remaining
+    on_complete: Callable[[float], None]  # called with completion time
+    preemptible: bool = True
+    # bookkeeping
+    started_at: Optional[float] = None
+    container_id: Optional[int] = None
+    _finish_evt: Optional[EventHandle] = None
+    _work_started: Optional[float] = None
+
+
+class Cluster:
+    def __init__(self, sim: Simulator, config: ClusterConfig):
+        self.sim = sim
+        self.cfg = config
+        self.pending: List[Task] = []
+        self.running: Dict[int, Task] = {}
+        self._ids = itertools.count()
+        self._cids = itertools.count()
+        # metrics
+        self.container_seconds: float = 0.0
+        self.container_seconds_by_job: Dict[str, float] = {}
+        self.n_deploys: int = 0
+        self.n_preemptions: int = 0
+        self.busy_until: float = 0.0
+        self._tick_scheduled = False
+
+    # ---- public API --------------------------------------------------------
+    def submit(
+        self,
+        job_id: str,
+        priority: float,
+        work_s: float,
+        on_complete: Callable[[float], None],
+        preemptible: bool = True,
+    ) -> Task:
+        t = Task(next(self._ids), job_id, priority, work_s, on_complete,
+                 preemptible)
+        self.pending.append(t)
+        self._ensure_tick()
+        return t
+
+    def boost(self, task: Task, new_priority: float) -> None:
+        task.priority = min(task.priority, new_priority)
+        self._ensure_tick()
+
+    def idle_capacity(self) -> int:
+        return self.cfg.capacity - len(self.running)
+
+    # ---- scheduling tick (every delta seconds while work exists) -----------
+    def _ensure_tick(self) -> None:
+        if not self._tick_scheduled:
+            self._tick_scheduled = True
+            self.sim.schedule(0.0, self._tick)
+
+    def _tick(self) -> None:
+        self._tick_scheduled = False
+        self.pending.sort(key=lambda t: (t.priority, t.task_id))
+        # start as many pending tasks as capacity allows
+        while self.pending and self.idle_capacity() > 0:
+            self._start(self.pending.pop(0))
+        # preemption: a strictly-higher-priority pending task evicts the
+        # worst running preemptible task (§5.5)
+        while self.pending:
+            cand = self.pending[0]
+            victims = [
+                t for t in self.running.values()
+                if t.preemptible and t.priority > cand.priority
+            ]
+            if not victims:
+                break
+            victim = max(victims, key=lambda t: t.priority)
+            self._preempt(victim)
+            self._start(self.pending.pop(0))
+        if self.pending:
+            self._tick_scheduled = True
+            self.sim.schedule(self.cfg.delta_s, self._tick)
+
+    # ---- internals ----------------------------------------------------------
+    def _start(self, task: Task) -> None:
+        cid = next(self._cids)
+        task.container_id = cid
+        task.started_at = self.sim.now
+        self.n_deploys += 1
+        startup = self.cfg.deploy_overhead_s + self.cfg.state_load_s
+        task._work_started = self.sim.now + startup
+        self.running[task.task_id] = task
+        task._finish_evt = self.sim.schedule(startup + task.work_s,
+                                             lambda: self._finish(task))
+
+    def _bill(self, task: Task, end: float) -> None:
+        start = task.started_at if task.started_at is not None else end
+        dur = end - start
+        self.container_seconds += dur
+        self.container_seconds_by_job[task.job_id] = (
+            self.container_seconds_by_job.get(task.job_id, 0.0) + dur
+        )
+
+    def _finish(self, task: Task) -> None:
+        # checkpoint result to stable storage, then release the container
+        end = self.sim.now + self.cfg.checkpoint_s
+        self.running.pop(task.task_id, None)
+
+        def complete():
+            self._bill(task, self.sim.now)
+            task.on_complete(self.sim.now)
+            self._ensure_tick()
+
+        self.sim.schedule(self.cfg.checkpoint_s, complete)
+
+    def _preempt(self, task: Task) -> None:
+        assert task._finish_evt is not None
+        task._finish_evt.cancel()
+        self.n_preemptions += 1
+        done = max(0.0, self.sim.now - (task._work_started or self.sim.now))
+        task.work_s = max(0.0, task.work_s - done)
+        self.running.pop(task.task_id, None)
+        # checkpoint the partially-aggregated state (§5.5), bill, requeue
+        end = self.sim.now + self.cfg.checkpoint_s
+        self._bill(task, end)
+        task.started_at = None
+        task.container_id = None
+        self.sim.schedule_at(end, lambda: self._requeue(task))
+
+    def _requeue(self, task: Task) -> None:
+        self.pending.append(task)
+        self._ensure_tick()
+
+
+class AlwaysOnContainer:
+    """Dedicated always-on aggregator (the Eager-AO baseline): billed from
+    job start to job end regardless of utilisation."""
+
+    def __init__(self, cluster: Cluster, job_id: str):
+        self.cluster = cluster
+        self.job_id = job_id
+        self.start_t = cluster.sim.now
+        self.busy_until = cluster.sim.now
+        self.work_done = 0.0
+
+    def process(self, work_s: float, on_complete: Callable[[float], None]):
+        start = max(self.cluster.sim.now, self.busy_until)
+        self.busy_until = start + work_s
+        self.work_done += work_s
+        self.cluster.sim.schedule_at(
+            self.busy_until, lambda: on_complete(self.cluster.sim.now)
+        )
+
+    def shutdown(self) -> float:
+        dur = self.cluster.sim.now - self.start_t
+        self.cluster.container_seconds += dur
+        self.cluster.container_seconds_by_job[self.job_id] = (
+            self.cluster.container_seconds_by_job.get(self.job_id, 0.0) + dur
+        )
+        return dur

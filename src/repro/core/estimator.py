@@ -1,0 +1,91 @@
+"""Aggregation-time estimation (§5.4, Fig. 6 line 13).
+
+t_agg = (N_parties * t_pair) / (C_agg * N_agg) + M / B_dc
+
+t_pair — the time to fuse ONE pair of model updates — is measured offline by
+generating random updates of the job's model shape and timing the fusion
+kernel (``measure_t_pair``). For GPU/TPU aggregation the number of usable
+cores is bounded by how many updates fit in accelerator memory
+(``usable_cores``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.jobspec import FLJobSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregatorResources:
+    """Resources available for one aggregation deployment."""
+
+    n_aggregators: int = 1  # N_agg: containers / pods
+    cores_per_aggregator: int = 2  # C_agg: usable CPU/GPU cores each
+    intra_dc_bw: float = 1.25e9  # B_dc, bytes/s (10 Gb/s)
+    accelerator_mem_bytes: Optional[float] = None  # GPU/TPU memory bound
+
+
+def usable_cores(res: AggregatorResources, model_bytes: int) -> int:
+    """C_agg, clamped by how many updates fit in accelerator memory (§5.4)."""
+    c = res.cores_per_aggregator
+    if res.accelerator_mem_bytes:
+        fit = int(res.accelerator_mem_bytes // max(model_bytes, 1)) - 1
+        c = max(1, min(c, fit))
+    return c
+
+
+def measure_t_pair(
+    fuse_pair: Callable[[np.ndarray, np.ndarray], np.ndarray],
+    model_bytes: int,
+    *,
+    trials: int = 3,
+    rng: Optional[np.random.Generator] = None,
+) -> float:
+    """Offline t_pair measurement: fuse randomly-generated updates (§5.4)."""
+    rng = rng or np.random.default_rng(0)
+    n = max(model_bytes // 4, 1)  # fp32 elements
+    a = rng.standard_normal(n).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    fuse_pair(a, b)  # warmup (jit etc.)
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        out = fuse_pair(a, b)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass
+class AggregationEstimator:
+    """Estimates t_agg for a job given measured t_pair and resources."""
+
+    t_pair_s: float
+    resources: AggregatorResources = dataclasses.field(
+        default_factory=AggregatorResources
+    )
+
+    def t_agg(self, job: FLJobSpec, n_updates: Optional[int] = None) -> float:
+        n = n_updates if n_updates is not None else job.n_parties
+        res = self.resources
+        c_agg = usable_cores(res, job.model_bytes)
+        compute = (n * self.t_pair_s) / (c_agg * res.n_aggregators)
+        comm = job.model_bytes / res.intra_dc_bw
+        return compute + comm
+
+    def calibrate(self, observed_t_agg: float, job: FLJobSpec,
+                  n_updates: int) -> None:
+        """Feed back an observed aggregation duration to re-fit t_pair."""
+        res = self.resources
+        c_agg = usable_cores(res, job.model_bytes)
+        comm = job.model_bytes / res.intra_dc_bw
+        compute = max(observed_t_agg - comm, 1e-9)
+        new_t_pair = compute * c_agg * res.n_aggregators / max(n_updates, 1)
+        # conservative blend: keep the larger (late aggregation hurts SLA
+        # more than an early start wastes resources)
+        self.t_pair_s = 0.5 * (self.t_pair_s + max(new_t_pair, self.t_pair_s))

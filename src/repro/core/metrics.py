@@ -1,0 +1,58 @@
+"""Metrics per §6.2: aggregation latency (per round, reported as the mean
+over rounds) and container-seconds -> projected cost (Azure ACI pricing)."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Dict, List, Optional, Tuple
+
+AZURE_PRICE_PER_CONTAINER_S = 0.0002692  # US$ (paper Fig. 9 source [8])
+
+
+@dataclasses.dataclass
+class JobMetrics:
+    job_id: str
+    strategy: str
+    round_latencies: List[float] = dataclasses.field(default_factory=list)
+    rounds_done: int = 0
+    updates_received: int = 0
+    container_seconds: float = 0.0
+    cost_usd: float = 0.0
+    n_deploys: int = 0
+    jit_deploys: int = 0
+    jit_early_drains: int = 0
+    dropped_updates: int = 0  # parties that missed the t_wait window (§4.3)
+    quorum_failures: int = 0  # rounds below quorum (§5.1)
+    finished_at: Optional[float] = None
+    predictions: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list
+    )  # (t_rnd, t_agg) per round, JIT only
+
+    @property
+    def mean_latency(self) -> float:
+        return statistics.fmean(self.round_latencies) if self.round_latencies else 0.0
+
+    @property
+    def p95_latency(self) -> float:
+        if not self.round_latencies:
+            return 0.0
+        xs = sorted(self.round_latencies)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "strategy": self.strategy,
+            "rounds": self.rounds_done,
+            "mean_latency_s": round(self.mean_latency, 3),
+            "p95_latency_s": round(self.p95_latency, 3),
+            "container_seconds": round(self.container_seconds, 1),
+            "cost_usd": round(self.container_seconds * AZURE_PRICE_PER_CONTAINER_S, 4),
+            "job_duration_s": round(self.finished_at or 0.0, 1),
+        }
+
+
+def savings(base: JobMetrics, ours: JobMetrics) -> float:
+    """Resource-saving percentage of `ours` relative to `base` (paper Fig. 9)."""
+    if base.container_seconds <= 0:
+        return 0.0
+    return 100.0 * (1.0 - ours.container_seconds / base.container_seconds)

@@ -1,0 +1,129 @@
+"""The JIT aggregation scheduler — faithful implementation of the paper's
+Fig. 6 pseudocode, multi-job, over the shared cluster.
+
+  upon ARRIVAL(J):      estimate t_upd per party, t_rnd = max, t_agg (§5.3-5.4)
+  upon START_ROUND(J):  create aggregator task, priority := timer := t_rnd - t_agg
+  upon TIMER_ALERT(A):  if not executing, force-trigger (deadline, §5.5)
+
+A smaller priority value = more urgent. Between the round start and the
+deadline, the cluster may opportunistically run the aggregator early when it
+has idle capacity (scheduling decisions every delta seconds); if
+higher-priority work arrives, running aggregators are preempted and their
+partially-aggregated state checkpointed to the message queue (§5.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.cluster import Cluster, Task
+from repro.core.estimator import AggregationEstimator
+from repro.core.events import EventHandle, Simulator
+from repro.core.jobspec import FLJobSpec
+from repro.core.prediction import UpdatePredictor
+from repro.core.queue import MessageQueue
+
+
+@dataclasses.dataclass
+class JobState:
+    job: FLJobSpec
+    predictor: UpdatePredictor
+    t_rnd: float = 0.0
+    t_agg: float = 0.0
+    round_idx: int = 0
+    round_start: float = 0.0
+    task: Optional[Task] = None
+    timer: Optional[EventHandle] = None
+    executing: bool = False
+    done_rounds: int = 0
+
+
+class JITScheduler:
+    """Schedules aggregation for many concurrent FL jobs on one cluster."""
+
+    def __init__(
+        self,
+        sim: Simulator,
+        cluster: Cluster,
+        estimator: AggregationEstimator,
+        queue: Optional[MessageQueue] = None,
+        on_aggregated: Optional[Callable[[str, int, float], None]] = None,
+        priority_policy: str = "deadline",  # "deadline" (§5.5) | "fifo"
+    ):
+        assert priority_policy in ("deadline", "fifo"), priority_policy
+        self.sim = sim
+        self.cluster = cluster
+        self.est = estimator
+        self.queue = queue or MessageQueue()
+        self.jobs: Dict[str, JobState] = {}
+        self.on_aggregated = on_aggregated  # (job_id, round, completion_t)
+        self.priority_policy = priority_policy
+
+    # ---- Fig. 6 line 1: upon ARRIVAL -----------------------------------------
+    def upon_arrival(self, job: FLJobSpec) -> JobState:
+        job.validate()
+        st = JobState(job=job, predictor=UpdatePredictor(job))
+        st.t_rnd = st.predictor.t_rnd()  # lines 6-11
+        st.t_agg = self.est.t_agg(job)  # line 13
+        self.jobs[job.job_id] = st  # line 12 (FLJOBS[J])
+        return st
+
+    # ---- Fig. 6 line 14: upon START_ROUND --------------------------------------
+    def start_round(self, job_id: str) -> None:
+        st = self.jobs[job_id]
+        st.round_start = self.sim.now
+        st.executing = False
+        # refresh estimates from the predictor's online observations
+        st.t_rnd = st.predictor.t_rnd()
+        st.t_agg = self.est.t_agg(st.job)
+        defer = max(0.0, st.t_rnd - st.t_agg)
+        deadline = st.round_start + defer  # line 17 (absolute deadline)
+        # §5.5 sets priority == deadline (earliest-deadline-first under
+        # contention); the "fifo" baseline orders by submission time only
+        priority = deadline if self.priority_policy == "deadline" \
+            else st.round_start
+        st.task = self.cluster.submit(
+            job_id,
+            priority=priority,
+            work_s=self._round_work(st),
+            on_complete=lambda t, j=job_id: self._aggregated(j, t),
+            preemptible=True,
+        )
+        st.timer = self.sim.schedule_at(
+            deadline, lambda j=job_id: self.timer_alert(j)
+        )  # line 18
+
+    # ---- Fig. 6 line 19: upon TIMER_ALERT ----------------------------------------
+    def timer_alert(self, job_id: str) -> None:
+        st = self.jobs.get(job_id)
+        if st is None or st.task is None or st.executing:
+            return
+        # force trigger: boost to highest priority so the next tick starts it
+        self.cluster.boost(st.task, float("-inf"))  # line 21
+
+    # ---- internals ------------------------------------------------------------
+    def _round_work(self, st: JobState) -> float:
+        from repro.core.estimator import usable_cores
+
+        res = self.est.resources
+        w_u = self.est.t_pair_s / (
+            usable_cores(res, st.job.model_bytes) * res.n_aggregators
+        )
+        return st.job.quorum * w_u + st.job.model_bytes / res.intra_dc_bw
+
+    def _aggregated(self, job_id: str, t: float) -> None:
+        st = self.jobs[job_id]
+        st.executing = False
+        if st.timer:
+            st.timer.cancel()
+        observed = t - st.round_start - max(0.0, st.t_rnd - st.t_agg)
+        self.est.calibrate(max(observed, 1e-6), st.job, st.job.quorum)
+        st.done_rounds += 1
+        st.round_idx += 1
+        if self.on_aggregated:
+            self.on_aggregated(job_id, st.round_idx - 1, t)
+
+    # ---- feedback from parties ---------------------------------------------------
+    def observe_update(self, job_id: str, party_id: str,
+                       train_time_s: float) -> None:
+        self.jobs[job_id].predictor.observe_round(party_id, train_time_s)

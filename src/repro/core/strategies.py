@@ -1,0 +1,598 @@
+"""The four aggregation deployment strategies of §3 + the JIT strategy of §5,
+driven over the discrete-event simulator.
+
+  eager_ao          — always-on aggregator (IBM FL / FATE / NVFLARE style)
+  eager_serverless  — deploy an aggregator per update arrival (Eager-λ)
+  batched           — deploy per batch of updates (Batched-λ)
+  lazy              — deploy once, after the last update arrives
+  jit               — deploy at predicted (t_rnd - t_agg); timer + priority
+
+Each strategy processes updates of one FL job over R synchronisation rounds;
+parties are emulated with the paper's §6.3 arrival models. Metrics follow
+§6.2: aggregation latency (completion - last update arrival) and container
+seconds (including deploy/load/checkpoint overheads).
+
+JIT details implemented from §5.5:
+  * deadline timer at t_rnd − t_agg (priority value = the same quantity);
+  * work-conserving: if the timer fires with no pending updates the task is
+    deferred by δ, retaining its priority ("If there are no pending updates
+    to aggregate, the JIT scheduler defers aggregation tasks");
+  * all-arrived early trigger: once every expected update is in the queue
+    there is nothing left to defer for;
+  * opportunistic early drains when the cluster is idle and enough work is
+    pending to amortise a deployment (the greedy/priority path);
+  * keep-alive policy while deployed: when the queue runs dry the container
+    is kept hot only if the expected wait for the next update costs less
+    than a checkpoint + redeploy cycle, otherwise state is checkpointed and
+    the container released (redeployed on the next arrival).
+
+Beyond-paper refinements (``jit_policy="orderstat"``, the default):
+
+  1. Order-statistic t_rnd for intermittent parties: the paper predicts
+     t_rnd = t_wait (Fig. 6 line 7), an upper bound — the actual last
+     update of N parties sending at uniformly random times lands at
+     E[max] = t_comm + (t_wait − t_comm)·N/(N+1).
+  2. Backlog-fill trigger: instead of the paper's fixed timer at
+     t_rnd − t_agg(N) (which counts fuse work for all N updates even
+     though only the queued backlog is actually waiting), deploy when
+       (t_rnd_exp − now) ≤ oh_startup + len(pending)·w_u,
+     i.e. when the queued work exactly fills the time left until the
+     predicted last arrival. The drain then completes ≈ t_rnd with zero
+     container idle. The paper's own timer is kept as the SLA backstop
+     (force-trigger, Fig. 6 line 19-21).
+
+``jit_policy="paper"`` reproduces Fig. 6 literally (fixed timer, t_wait
+prediction for intermittent parties). Both policies share the
+work-conserving defer, all-arrived trigger and keep-alive economics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.core.cluster import AlwaysOnContainer, Cluster, ClusterConfig
+from repro.core.estimator import AggregationEstimator, usable_cores
+from repro.core.events import Simulator
+from repro.core.jobspec import FLJobSpec
+from repro.core.metrics import JobMetrics
+from repro.core.prediction import UpdatePredictor
+
+STRATEGIES = ("eager_ao", "eager_serverless", "batched", "lazy", "jit")
+
+
+# --------------------------------------------------------------------------
+# party arrival emulation (§6.3)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ArrivalModel:
+    """Samples actual (train, comm) times per party per round.
+
+    Active parties: gaussian noise around their true periodic time.
+    Intermittent parties: update at a uniformly random time in [0, t_wait]
+    (the paper's random update scheme).
+    """
+
+    job: FLJobSpec
+    noise_rel: float = 0.02
+    seed: int = 0
+    dropout_prob: float = 0.0  # per-round no-show probability (§2.2)
+
+    def __post_init__(self):
+        if self.dropout_prob:
+            assert self.job.t_wait_s, \
+                "dropout needs a t_wait window to close rounds (§4.3)"
+        self.rng = np.random.default_rng(self.seed)
+        # ground-truth per-party train time: spec timing is the mean
+        self.true_train: Dict[str, float] = {}
+        for pid, p in self.job.parties.items():
+            if p.mode == "intermittent":
+                continue
+            if p.epoch_time_s is not None:
+                self.true_train[pid] = p.epoch_time_s
+            elif p.minibatch_time_s is not None:
+                n_mb = max(1, p.dataset_size // max(p.batch_size, 1))
+                self.true_train[pid] = p.minibatch_time_s * n_mb
+            else:
+                from repro.core.prediction import DEFAULT_HARDWARE_THROUGHPUT
+
+                thr = DEFAULT_HARDWARE_THROUGHPUT[p.hardware] * p.n_accelerators
+                self.true_train[pid] = p.dataset_size / thr
+
+    def sample_arrival(self, pid: str) -> Optional[float]:
+        """Offset of the update arrival from the round start, or None when
+        the party drops out this round (never reports before t_wait)."""
+        if self.dropout_prob and self.rng.uniform() < self.dropout_prob:
+            return None
+        p = self.job.parties[pid]
+        m = self.job.model_bytes
+        comm = m / p.bw_down + m / p.bw_up
+        if p.mode == "intermittent":
+            assert self.job.t_wait_s
+            return float(self.rng.uniform(0.0, self.job.t_wait_s - comm)) + comm
+        t = self.true_train[pid]
+        t = max(t * (1.0 + self.rng.normal(0.0, self.noise_rel)), 1e-6)
+        return t + comm
+
+    def sample_train_time(self, pid: str, arrival_offset: float) -> float:
+        """The training time implied by an arrival (for predictor feedback)."""
+        p = self.job.parties[pid]
+        m = self.job.model_bytes
+        return arrival_offset - (m / p.bw_down + m / p.bw_up)
+
+
+# --------------------------------------------------------------------------
+# round engine
+# --------------------------------------------------------------------------
+class StrategyRun:
+    """Runs one job under one strategy; collects JobMetrics."""
+
+    def __init__(
+        self,
+        sim: Simulator,
+        cluster: Cluster,
+        job: FLJobSpec,
+        estimator: AggregationEstimator,
+        strategy: str,
+        *,
+        batch_trigger: int = 10,
+        arrival_model: Optional[ArrivalModel] = None,
+        opportunistic: bool = False,
+        on_job_done: Optional[Callable[[], None]] = None,
+        on_round_complete: Optional[Callable[[int, float], None]] = None,
+        external_arrivals: bool = False,  # updates injected via inject_update
+        gated_rounds: bool = False,  # next round waits for release_round()
+        jit_policy: str = "orderstat",  # "orderstat" | "paper"
+        margin_sigmas: float = 2.0,
+        keepalive_factor: float = 1.0,
+        amort_factor: float = 4.0,
+        eager_max_per_invocation: int = 32,
+    ):
+        assert strategy in STRATEGIES, strategy
+        assert jit_policy in ("orderstat", "paper"), jit_policy
+        job.validate()
+        self.sim, self.cluster, self.job = sim, cluster, job
+        self.est = estimator
+        self.strategy = strategy
+        self.batch_trigger = batch_trigger
+        self.arrivals = arrival_model or ArrivalModel(job)
+        self.opportunistic = opportunistic
+        self.on_job_done = on_job_done
+        self.on_round_complete = on_round_complete
+        self.external_arrivals = external_arrivals
+        self.gated_rounds = gated_rounds
+        self._release_pending = False
+        self._round_waiting = None  # continuation when gated
+        self.jit_policy = jit_policy
+        self.margin_sigmas = margin_sigmas
+        self.keepalive_factor = keepalive_factor
+        self.amort_factor = amort_factor
+        self.eager_cap = max(1, eager_max_per_invocation)
+        self.predictor = UpdatePredictor(job)
+        self.metrics = JobMetrics(job.job_id, strategy)
+        # per-update fuse work on one deployment (paper: t_pair scaled by
+        # usable cores x aggregator count)
+        res = estimator.resources
+        self.w_u = estimator.t_pair_s / (
+            usable_cores(res, job.model_bytes) * res.n_aggregators
+        )
+        self.bcast_comm = job.model_bytes / estimator.resources.intra_dc_bw
+        cc = self.cluster.cfg
+        self.oh_startup = cc.deploy_overhead_s + cc.state_load_s
+        self.oh_cycle = self.oh_startup + cc.checkpoint_s  # redeploy cost
+        # state
+        self.round = 0
+        self.ao: Optional[AlwaysOnContainer] = None
+        self._reset_round_state()
+
+    # ---- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        if self.strategy == "eager_ao":
+            self.ao = AlwaysOnContainer(self.cluster, self.job.job_id)
+        self._start_round()
+
+    def _reset_round_state(self):
+        self.pending: List[float] = []  # arrival times not yet aggregated
+        self.processed = 0
+        self.arrived = 0
+        self.arrived_parties: Set[str] = set()
+        self.task_active = False
+        self.last_arrival: Optional[float] = None
+        self.round_start = self.sim.now
+        self.inflight = 0  # updates handed to a running task
+        # streaming container (JIT)
+        self.stream_deployed = False
+        self.stream_busy_until: Optional[float] = None
+        self.stream_start_t: Optional[float] = None
+        self.jit_armed = False  # past the deadline / all-arrived trigger
+        self._jit_timer = None
+        self._close_timer = None
+        self.round_target = self.job.n_parties  # reduced at window close
+
+    def _start_round(self) -> None:
+        self._reset_round_state()
+        self.round_start = self.sim.now
+        # schedule this round's update arrivals (unless driven externally,
+        # e.g. by edge-tier aggregators in the hierarchical topology)
+        if not self.external_arrivals:
+            for pid in self.job.parties:
+                off = self.arrivals.sample_arrival(pid)
+                if off is None:  # party drops out this round (§2.2)
+                    continue
+                self.sim.schedule(
+                    off, lambda pid=pid, off=off: self._on_update(pid, off))
+        # §4.3/§5.1: updates past t_wait are ignored; the round closes at the
+        # window boundary with whatever arrived, provided quorum is met
+        if self.job.t_wait_s:
+            self._close_timer = self.sim.schedule(
+                float(self.job.t_wait_s), self._close_round_window)
+        # JIT: plan the deployment from predictions (Fig. 6)
+        if self.strategy == "jit":
+            self._jit_t_rnd_exp = self._jit_expected_t_rnd()
+            t_rnd_sla = self.predictor.t_rnd()  # Fig. 6 lines 6-11
+            t_agg = self.est.t_agg(self.job)  # Fig. 6 line 13
+            trigger = max(0.0, t_rnd_sla - t_agg - self.oh_startup)
+            self.metrics.predictions.append((t_rnd_sla, t_agg))
+            self._jit_priority = self.round_start + trigger  # §5.5 priority
+            self._jit_timer = self.sim.schedule(trigger, self._jit_timer_fire)
+
+    # ---- JIT prediction of the round end -------------------------------------
+    def _jit_expected_t_rnd(self) -> float:
+        """Expected last-arrival offset under the active policy."""
+        if self.jit_policy == "paper" or not self.job.has_intermittent():
+            # Fig. 6 lines 6-11 (for intermittent parties t_train = t_wait).
+            return self.predictor.t_rnd()
+        # order-statistic estimate for the intermittent max (see docstring)
+        ints = [p for p in self.job.parties.values() if p.mode == "intermittent"]
+        acts = [
+            self.predictor.t_upd(p.party_id)
+            for p in self.job.parties.values()
+            if p.mode != "intermittent"
+        ]
+        k = len(ints)
+        m = self.job.model_bytes
+        comm = max(m / p.bw_down + m / p.bw_up for p in ints)
+        span = max(float(self.job.t_wait_s) - comm, 0.0)
+        mean_max = comm + span * k / (k + 1)
+        return max(mean_max, max(acts) if acts else 0.0)
+
+    def _jit_backlog_fill(self) -> bool:
+        """True when the queued fuse work fills the time left to t_rnd_exp:
+        deploying now finishes the drain just as the last update lands."""
+        left = self.round_start + self._jit_t_rnd_exp - self.sim.now
+        return left <= self.oh_startup + len(self.pending) * self.w_u
+
+    def _expected_remaining_makespan(self):
+        """(R, k): expected time until the round's last update arrives, and
+        the number of updates still outstanding (keep-alive economics)."""
+        now = self.sim.now
+        k = 0
+        R = 0.0
+        max_tupd = 0.0
+        for pid, p in self.job.parties.items():
+            if pid in self.arrived_parties:
+                continue
+            k += 1
+            if p.mode == "intermittent":
+                t_end = self.round_start + float(self.job.t_wait_s)
+                R = max(R, max(t_end - now, 0.0))
+            else:
+                t_upd = self.predictor.t_upd(pid)
+                max_tupd = max(max_tupd, t_upd)
+                R = max(R, self.round_start + t_upd - now)
+        if max_tupd:
+            # overdue parties (eta<=0) are late by an unknown amount on the
+            # prediction-noise scale — never report a zero makespan
+            R = max(R, 0.02 * max_tupd)
+        return R, k
+
+    # ---- update arrival --------------------------------------------------------
+    def _on_update(self, pid: str, offset: float) -> None:
+        now = self.sim.now
+        self.arrived += 1
+        self.arrived_parties.add(pid)
+        self.last_arrival = now
+        self.pending.append(now)
+        self.metrics.updates_received += 1
+        # predictor feedback (JIT uses it; harmless for others)
+        train_t = self.arrivals.sample_train_time(pid, offset)
+        self.predictor.observe_round(pid, train_t)
+
+        s = self.strategy
+        if s == "eager_ao":
+            self._ao_process()
+        elif s == "eager_serverless":
+            # §3: deploy an aggregator dynamically per arriving update; a
+            # busy aggregator serialises followers (bounded per invocation)
+            if not self.task_active:
+                self._submit_batch(min(len(self.pending), self.eager_cap))
+        elif s == "batched":
+            if len(self.pending) >= self.batch_trigger or self._all_arrived():
+                self._submit_batch(len(self.pending))
+        elif s == "lazy":
+            if self._all_arrived():
+                self._submit_batch(len(self.pending))
+        elif s == "jit":
+            self._jit_on_update()
+
+    def _all_arrived(self) -> bool:
+        return self.arrived >= self.round_target
+
+    def _close_round_window(self) -> None:
+        """t_wait reached: ignore missing parties (§4.3); aggregate what
+        arrived if quorum holds, else record a failed round (§5.1)."""
+        self._close_timer = None
+        missing = self.job.n_parties - self.arrived
+        if missing <= 0:
+            return
+        self.metrics.dropped_updates += missing
+        if self.arrived < self.job.quorum:
+            self.metrics.quorum_failures += 1
+            self.round_target = self.arrived  # close with what we have
+            if self.arrived == 0:
+                self._round_complete()
+                return
+        self.round_target = self.arrived
+        if self.processed >= self.round_target and self.inflight == 0:
+            self._round_complete()
+            return
+        # kick the strategy to drain the remainder now
+        s = self.strategy
+        if s == "eager_ao":
+            self._ao_process()
+        elif s in ("eager_serverless", "batched", "lazy"):
+            if not self.task_active and self.pending:
+                self._submit_batch(len(self.pending))
+        elif s == "jit":
+            if self.stream_deployed:
+                self._stream_feed()
+            else:
+                self._jit_arm()
+
+    # ---- eager always-on --------------------------------------------------------
+    def _ao_process(self):
+        k = len(self.pending)
+        if not k:
+            return
+        self.pending.clear()
+        self.inflight += k
+        self.ao.process(k * self.w_u, lambda t, k=k: self._on_processed(k, t))
+
+    # ---- serverless task submission (eager / batched / lazy) ---------------------
+    def _submit_batch(self, k: int):
+        if k <= 0:
+            return
+        del self.pending[:k]
+        self.inflight += k
+        self.task_active = True
+        self.cluster.submit(
+            self.job.job_id,
+            priority=self.sim.now,  # FIFO among serverless tasks
+            work_s=k * self.w_u,
+            on_complete=lambda t, k=k: self._on_processed(k, t),
+            preemptible=False,
+        )
+
+    # ---- JIT (§5.5) ---------------------------------------------------------------
+    def _jit_on_update(self):
+        if self.stream_deployed:
+            self._stream_feed()
+            return
+        if self._all_arrived():
+            # nothing left to wait for: trigger now
+            self._jit_arm()
+            return
+        if self.jit_armed:
+            # tail update after the deadline drain released the container
+            self._stream_deploy()
+            return
+        if self.jit_policy == "orderstat" and self._jit_backlog_fill():
+            self._jit_arm()
+            return
+        if self.opportunistic and self.cluster.idle_capacity() > 0:
+            # greedy early drain when pending work amortises a deployment
+            if len(self.pending) * self.w_u >= self.amort_factor * self.oh_cycle:
+                self.metrics.jit_early_drains += 1
+                self._stream_deploy()
+
+    def _jit_timer_fire(self):
+        """Deadline reached (Fig. 6 line 19-21), work-conserving per §5.5."""
+        if self.jit_armed or self.stream_deployed:
+            return
+        if self.pending:
+            self._jit_arm()
+        else:
+            # no pending updates: defer, retaining the priority (§5.5)
+            self._jit_timer = self.sim.schedule(
+                self.cluster.cfg.delta_s, self._jit_timer_fire
+            )
+
+    def _jit_arm(self):
+        """Point of no return: from here updates are handled eagerly."""
+        self.jit_armed = True
+        if self._jit_timer is not None:
+            self._jit_timer.cancel()
+            self._jit_timer = None
+        if not self.stream_deployed:
+            self._stream_deploy()
+
+    # ---- streaming container (JIT execution vehicle) -------------------------------
+    def _stream_deploy(self):
+        if self.stream_deployed or self.processed + self.inflight >= self.round_target:
+            return
+        self.stream_deployed = True
+        self.cluster.n_deploys += 1
+        self.metrics.jit_deploys += 1
+        self.stream_start_t = self.sim.now
+        self.stream_busy_until = self.sim.now + self.oh_startup
+        self._stream_feed()
+
+    def _stream_feed(self):
+        k = len(self.pending)
+        if k == 0:
+            return
+        self.pending.clear()
+        self.inflight += k
+        start = max(self.sim.now, self.stream_busy_until)
+        self.stream_busy_until = start + k * self.w_u
+        self.sim.schedule_at(
+            self.stream_busy_until, lambda k=k: self._on_processed(k, self.sim.now)
+        )
+
+    def _stream_release(self) -> float:
+        """Checkpoint partial aggregate + release the container; returns the
+        time at which the container is actually gone (after checkpoint)."""
+        end = self.sim.now + self.cluster.cfg.checkpoint_s
+        start = self.stream_start_t if self.stream_start_t is not None else end
+        dur = end - start
+        self.cluster.container_seconds += dur
+        self.cluster.container_seconds_by_job[self.job.job_id] = (
+            self.cluster.container_seconds_by_job.get(self.job.job_id, 0.0) + dur
+        )
+        self.stream_deployed = False
+        self.stream_start_t = None
+        return end
+
+    def _jit_on_dry(self):
+        """Stream drained but more updates are expected: keep-alive policy.
+
+        Economics: staying hot until the round ends costs the expected
+        remaining makespan R in idle container-seconds; releasing costs up
+        to one checkpoint+redeploy cycle per remaining straggler. Stay hot
+        iff R <= keepalive_factor * k * oh_cycle."""
+        if self.inflight > 0:
+            return  # later feeds still running: the stream is not dry yet
+        R, k = self._expected_remaining_makespan()
+        if k > 0 and R <= self.keepalive_factor * k * self.oh_cycle:
+            return  # cheaper to idle hot than to checkpoint + redeploy
+        self._stream_release()
+
+    # ---- completion --------------------------------------------------------------
+    def _on_processed(self, k: int, t: float):
+        self.processed += k
+        self.inflight -= k
+        self.task_active = False
+        if self.processed >= self.round_target:
+            self._round_complete()
+            return
+        if self.stream_deployed:
+            if self.pending:
+                self._stream_feed()
+            else:
+                self._jit_on_dry()
+        elif self.strategy in ("eager_serverless", "batched") and self.pending:
+            cap = self.eager_cap if self.strategy == "eager_serverless" else len(
+                self.pending
+            )
+            self._submit_batch(min(len(self.pending), cap))
+
+    def _round_complete(self):
+        if self.strategy == "eager_ao":
+            done = self.sim.now  # state stays in memory; no checkpoint
+        elif self.stream_deployed:
+            done = self._stream_release()
+        else:
+            done = self.sim.now  # task checkpoint time already inside Cluster
+
+        latency = done - (self.last_arrival or done)
+        self.metrics.round_latencies.append(latency)
+        self.metrics.rounds_done += 1
+        completed = self.round
+        self.round += 1
+        if self._jit_timer is not None:
+            self._jit_timer.cancel()
+            self._jit_timer = None
+        if self._close_timer is not None:
+            self._close_timer.cancel()
+            self._close_timer = None
+        if self.on_round_complete:
+            self.on_round_complete(completed, done)
+
+        def next_round():
+            if self.round < self.job.rounds:
+                if self.gated_rounds and not self._release_pending:
+                    self._round_waiting = self._start_round  # wait for release
+                else:
+                    self._release_pending = False
+                    self._start_round()
+            else:
+                self._job_done()
+
+        if self.job.has_intermittent():
+            # fixed round windows: next round starts at t_wait boundary
+            nxt = self.round_start + float(self.job.t_wait_s)
+            self.sim.schedule_at(max(nxt, done), next_round)
+        else:
+            # active parties: next round after the fused model is broadcast
+            self.sim.schedule_at(done + self.bcast_comm, next_round)
+
+    # ---- hierarchical-topology hooks ------------------------------------------
+    def inject_update(self, pid: str) -> None:
+        """Deliver an externally-produced update (edge partial aggregate)."""
+        assert self.external_arrivals
+        self._on_update(pid, self.sim.now - self.round_start)
+
+    def release_round(self) -> None:
+        """Unblock the next gated round (e.g. global model broadcast)."""
+        if self._round_waiting is not None:
+            cont, self._round_waiting = self._round_waiting, None
+            cont()
+        else:
+            self._release_pending = True
+
+    def _job_done(self):
+        if self.ao is not None:
+            self.ao.shutdown()
+            self.ao = None
+        self.metrics.finished_at = self.sim.now
+        self.metrics.container_seconds = self.cluster.container_seconds_by_job.get(
+            self.job.job_id, 0.0
+        )
+        if self.on_job_done:
+            self.on_job_done()
+
+
+# --------------------------------------------------------------------------
+# convenience: run one job end-to-end under a strategy
+# --------------------------------------------------------------------------
+def run_strategy(
+    job: FLJobSpec,
+    strategy: str,
+    *,
+    t_pair_s: float = 0.05,
+    cluster_config: Optional[ClusterConfig] = None,
+    estimator: Optional[AggregationEstimator] = None,
+    batch_trigger: int = 10,
+    seed: int = 0,
+    noise_rel: float = 0.02,
+    dropout_prob: float = 0.0,
+    opportunistic: bool = False,
+    jit_policy: str = "orderstat",
+    margin_sigmas: float = 2.0,
+    keepalive_factor: float = 1.0,
+    amort_factor: float = 4.0,
+    eager_max_per_invocation: int = 32,
+) -> JobMetrics:
+    sim = Simulator()
+    cluster = Cluster(sim, cluster_config or ClusterConfig())
+    est = estimator or AggregationEstimator(t_pair_s)
+    run = StrategyRun(
+        sim, cluster, job, est, strategy,
+        batch_trigger=batch_trigger,
+        arrival_model=ArrivalModel(job, noise_rel=noise_rel, seed=seed,
+                                   dropout_prob=dropout_prob),
+        opportunistic=opportunistic,
+        jit_policy=jit_policy,
+        margin_sigmas=margin_sigmas,
+        keepalive_factor=keepalive_factor,
+        amort_factor=amort_factor,
+        eager_max_per_invocation=eager_max_per_invocation,
+    )
+    run.start()
+    sim.run()
+    m = run.metrics
+    m.n_deploys = cluster.n_deploys
+    m.cost_usd = m.container_seconds * cluster.cfg.price_per_container_s
+    return m

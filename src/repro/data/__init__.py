@@ -1,0 +1,7 @@
+from repro.data.loader import Loader  # noqa: F401
+from repro.data.partition import (  # noqa: F401
+    dirichlet_domain_mixes,
+    partition_indices,
+    party_sizes,
+)
+from repro.data.synthetic import SyntheticLM, SyntheticLMConfig  # noqa: F401

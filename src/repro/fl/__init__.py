@@ -1,0 +1,11 @@
+from repro.fl.aggregator import AggregationExecutor  # noqa: F401
+from repro.fl.fusion import (  # noqa: F401
+    ALGORITHMS,
+    FedAvg,
+    FedProx,
+    FedSGD,
+    FusionState,
+    get_algorithm,
+)
+from repro.fl.job import FLJobRuntime, RoundRecord  # noqa: F401
+from repro.fl.party import LocalResult, Party  # noqa: F401

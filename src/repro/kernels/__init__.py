@@ -1,0 +1,6 @@
+from repro.kernels.ops import (  # noqa: F401
+    accumulate,
+    fuse_quantized,
+    fuse_updates,
+    quantize_update,
+)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: N-way weighted fusion of flattened model updates.
+
+The paper models aggregation cost as (N_parties - 1) sequential pairwise
+fusions (t_pair each). On TPU the operation is bandwidth-bound, so we fuse
+all K updates resident in one VMEM tile in a single HBM sweep:
+
+  out[n] = sum_k w[k] * updates[k, n]
+
+Tiling: grid (K/KB, N/BN). Each step streams a (KB, BN) tile of updates into
+VMEM, multiplies by its weight slice held in VMEM, and accumulates into the
+fp32 output tile (revisited across the K-grid dimension — TPU grids iterate
+sequentially, so accumulation into the output block is safe).
+
+Block shape: BN is a multiple of 1024 = 8*128 (fp32 VMEM tiles are (8,128));
+a (8, 2048) tile keeps VMEM pressure at KB*BN*4B = 64 KiB per input tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 2048
+DEFAULT_KB = 8
+
+
+def _kernel(w_ref, u_ref, o_ref):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = u_ref[...].astype(jnp.float32)  # (KB, BN)
+    w = w_ref[...].astype(jnp.float32)  # (KB,)
+    o_ref[...] += jnp.einsum("k,kn->n", w, u)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "kb", "interpret"))
+def fused_agg(
+    updates: jax.Array,  # (K, N) any float dtype
+    weights: jax.Array,  # (K,)
+    *,
+    bn: int = DEFAULT_BN,
+    kb: int = DEFAULT_KB,
+    interpret: bool = True,  # CPU validation; False on real TPU
+) -> jax.Array:
+    k, n = updates.shape
+    kp = -(-k // kb) * kb
+    np_ = -(-n // bn) * bn
+    if kp != k or np_ != n:
+        updates = jnp.pad(updates, ((0, kp - k), (0, np_ - n)))
+        weights = jnp.pad(weights, (0, kp - k))
+    grid = (kp // kb, np_ // bn)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((kb,), lambda i, j: (i,)),
+            pl.BlockSpec((kb, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(weights, updates)
+    return out[:n].astype(updates.dtype)

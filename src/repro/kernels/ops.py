@@ -1,0 +1,114 @@
+"""jit'd public wrappers over the Pallas kernels, operating on model-update
+PYTREES (the paper's "list of one-dimensional vectors, one per layer").
+
+All entry points accept/return pytrees of arrays; leaves are flattened,
+fused leaf-wise by the kernels, and reshaped back. `interpret=True` executes
+the Pallas kernel bodies in Python on CPU (the validation mode for this
+container); on a real TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_agg import fused_agg
+from repro.kernels.pair_fuse import pair_fuse
+from repro.kernels.quant_agg import quant_agg, quantize
+
+Pytree = Any
+
+
+def _leaves(tree: Pytree):
+    return jax.tree.leaves(tree)
+
+
+def fuse_updates(
+    updates: Sequence[Pytree],
+    weights: Optional[Sequence[float]] = None,
+    *,
+    interpret: bool = True,
+) -> Pytree:
+    """Weighted fusion of K model updates (FedAvg-style weighted mean when
+    weights sum to 1). Leaf-wise: stacks each leaf across updates and runs
+    the fused_agg kernel once per leaf."""
+    k = len(updates)
+    assert k >= 1
+    if weights is None:
+        weights = [1.0 / k] * k
+    w = jnp.asarray(weights, jnp.float32)
+    treedef = jax.tree.structure(updates[0])
+    leaves = [jax.tree.leaves(u) for u in updates]
+    fused = []
+    for i in range(len(leaves[0])):
+        stack = jnp.stack([l[i].reshape(-1) for l in leaves])  # (K, N)
+        out = fused_agg(stack, w, interpret=interpret)
+        fused.append(out.reshape(leaves[0][i].shape).astype(leaves[0][i].dtype))
+    return jax.tree.unflatten(treedef, fused)
+
+
+def accumulate(
+    acc: Optional[Pytree],
+    update: Pytree,
+    weight: float,
+    *,
+    interpret: bool = True,
+) -> Pytree:
+    """Streaming (incremental) fusion: acc <- acc + weight*update.
+
+    This is the eager/JIT aggregator's inner operation: each arriving update
+    is folded into the running fp32 accumulator with the pair_fuse kernel,
+    so aggregation state is one model-sized buffer regardless of K."""
+    if acc is None:
+        return jax.tree.map(
+            lambda u: (u.astype(jnp.float32) * weight), update
+        )
+    return jax.tree.map(
+        lambda a, u: pair_fuse(
+            a.reshape(-1), u.astype(jnp.float32).reshape(-1),
+            op="wsum", wa=1.0, wb=float(weight), interpret=interpret,
+        ).reshape(a.shape),
+        acc,
+        update,
+    )
+
+
+def fuse_quantized(
+    q_updates: Sequence[Pytree],
+    scales: Sequence[Pytree],
+    weights: Optional[Sequence[float]] = None,
+    *,
+    interpret: bool = True,
+) -> Pytree:
+    """Fuse int8-quantised updates (beyond-paper comm compression).
+
+    q_updates: K pytrees of int8 leaves; scales: K pytrees of scalar scales.
+    """
+    k = len(q_updates)
+    if weights is None:
+        weights = [1.0 / k] * k
+    treedef = jax.tree.structure(q_updates[0])
+    qs = [jax.tree.leaves(u) for u in q_updates]
+    ss = [jax.tree.leaves(s) for s in scales]
+    fused = []
+    for i in range(len(qs[0])):
+        stack = jnp.stack([l[i].reshape(-1) for l in qs])  # (K, N) int8
+        sc = jnp.asarray(
+            [float(ss[j][i]) * weights[j] for j in range(k)], jnp.float32
+        )
+        out = quant_agg(stack, sc, interpret=interpret)
+        fused.append(out.reshape(qs[0][i].shape))
+    return jax.tree.unflatten(treedef, fused)
+
+
+def quantize_update(update: Pytree) -> tuple[Pytree, Pytree]:
+    """Party-side int8 quantisation of a model update (per-leaf scales)."""
+    qs, ss = [], []
+    leaves, treedef = jax.tree.flatten(update)
+    for l in leaves:
+        q, s = quantize(l)
+        qs.append(q.reshape(l.shape))
+        ss.append(s)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, ss)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: the paper's pairwise coordinate-wise fusion operator
+
+    M1 (+) M2 = [f(M1[1], M2[1]), ..., f(M1[n], M2[n])]
+
+used by incremental (streaming / eager) aggregation, where updates are fused
+one pair at a time as they arrive. f is selected statically: mean, weighted
+sum, max, min. Elementwise and bandwidth-bound; (8, 1024) fp32 tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 8 * 1024
+
+
+def _make_kernel(op: str):
+    def kernel(wa_ref, wb_ref, a_ref, b_ref, o_ref):
+        a = a_ref[...].astype(jnp.float32)
+        b = b_ref[...].astype(jnp.float32)
+        if op == "mean":
+            o = 0.5 * (a + b)
+        elif op == "wsum":
+            o = wa_ref[0] * a + wb_ref[0] * b
+        elif op == "max":
+            o = jnp.maximum(a, b)
+        elif op == "min":
+            o = jnp.minimum(a, b)
+        else:
+            raise ValueError(op)
+        o_ref[...] = o.astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def pair_fuse(
+    a: jax.Array,  # (N,)
+    b: jax.Array,  # (N,)
+    *,
+    op: str = "mean",
+    wa: float = 0.5,
+    wb: float = 0.5,
+    interpret: bool = True,
+) -> jax.Array:
+    (n,) = a.shape
+    np_ = -(-n // BN) * BN
+    if np_ != n:
+        a = jnp.pad(a, (0, np_ - n))
+        b = jnp.pad(b, (0, np_ - n))
+    wa_arr = jnp.full((1,), wa, jnp.float32)
+    wb_arr = jnp.full((1,), wb, jnp.float32)
+    out = pl.pallas_call(
+        _make_kernel(op),
+        grid=(np_ // BN,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BN,), lambda i: (i,)),
+            pl.BlockSpec((BN,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BN,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), a.dtype),
+        interpret=interpret,
+    )(wa_arr, wb_arr, a, b)
+    return out[:n]

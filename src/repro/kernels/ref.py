@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_agg_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """updates: (K, N); weights: (K,) -> (N,) weighted sum in fp32."""
+    return jnp.einsum(
+        "k,kn->n", weights.astype(jnp.float32), updates.astype(jnp.float32)
+    ).astype(updates.dtype)
+
+
+def pair_fuse_ref(a: jax.Array, b: jax.Array, op: str, wa: float = 0.5,
+                  wb: float = 0.5) -> jax.Array:
+    """The paper's coordinate-wise pairwise fusion f(M1[i], M2[i])."""
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    if op == "mean":
+        out = 0.5 * (a32 + b32)
+    elif op == "wsum":
+        out = wa * a32 + wb * b32
+    elif op == "max":
+        out = jnp.maximum(a32, b32)
+    elif op == "min":
+        out = jnp.minimum(a32, b32)
+    else:
+        raise ValueError(op)
+    return out.astype(a.dtype)
+
+
+def quant_agg_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """q: (K, N) int8; scales: (K,) fp32 -> (N,) fp32 dequantised weighted sum."""
+    return jnp.einsum("k,kn->n", scales, q.astype(jnp.float32))

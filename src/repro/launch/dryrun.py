@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination with ShapeDtypeStruct stand-ins (no allocation), print
+memory/cost analysis, and extract the roofline terms.
+
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # driver: all combos, subprocs
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(tok: str, tpu_dtype_adjust: bool = False) -> int:
+    """'bf16[2,16,4096]' -> byte size (0 for scalars/unknown).
+
+    tpu_dtype_adjust: the XLA *CPU* backend promotes bf16 dots to f32
+    (FloatNormalization), and the hoisted converts make SPMD collectives
+    f32 in the compiled HLO — 2x the bytes a TPU lowering moves (TPU
+    partitions the original bf16 values; verified with a minimal sharded
+    bf16 matmul: CPU HLO shows `f32 dot(wrapped_convert, ...)`). With the
+    flag set, f32 collectives are counted at bf16 width. The residual
+    error (collectives that are genuinely f32 on TPU: rmsnorm stats, loss
+    scalars, fp32 router logits) is <1% of collective bytes in every
+    profile we inspected.
+    """
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nb = _DTYPE_BYTES.get(dt)
+    if nb is None:
+        return 0
+    if tpu_dtype_adjust and dt == "f32":
+        nb = 2
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?body=%?([\w.\-]+)"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_SHAPE_RE = re.compile(r"[a-z0-9]+\[[0-9,]*\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum output bytes of every collective op in the partitioned HLO.
+
+    Scan bodies are NOT unrolled, so a collective inside a while body is
+    multiplied by the loop's known_trip_count (XLA records it in
+    backend_config). Nested whiles multiply transitively.
+    Returns (total, by_kind, counts) — per-device bytes per step.
+    """
+    # pass 1: split into computations; record per-computation collectives
+    # and while edges (parent -> (body, trip)).
+    comp = "__top__"
+    coll: dict = {}  # comp -> list[(kind, bytes)]
+    edges: dict = {}  # body_name -> (parent, trip)
+    is_entry: dict = {}
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _COMP_RE.match(raw) if raw and not raw.startswith(" ") else None
+        if m:
+            comp = m.group(1)
+            is_entry[comp] = raw.startswith("ENTRY")
+            continue
+        if not line.startswith(("%", "ROOT")):
+            continue
+        if " while(" in line:
+            mw = _WHILE_RE.search(line)
+            if mw:
+                mt = _TRIP_RE.search(line)
+                trip = int(mt.group(1)) if mt else 1
+                edges[mw.group(1)] = (comp, trip)
+            continue
+        for kind in _COLLECTIVES:
+            if re.search(rf"= [^=]*\b{kind}(-start)?\(", line):
+                lhs = line.split("=", 1)[1]
+                op_pos = lhs.find(kind)
+                toks = _SHAPE_RE.findall(lhs[:op_pos])
+                nb = sum(_shape_bytes(t) for t in toks)
+                nb_tpu = sum(_shape_bytes(t, tpu_dtype_adjust=True)
+                             for t in toks)
+                coll.setdefault(comp, []).append((kind, nb, nb_tpu))
+                break
+
+    def multiplier(c: str, depth: int = 0) -> int:
+        if depth > 16 or c not in edges:
+            return 1
+        parent, trip = edges[c]
+        return trip * multiplier(parent, depth + 1)
+
+    by_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    total_tpu = 0
+    for c, items in coll.items():
+        mult = multiplier(c)
+        for kind, nb, nb_tpu in items:
+            by_kind[kind] += nb * mult
+            counts[kind] += mult
+            total_tpu += nb_tpu * mult
+    return sum(by_kind.values()), by_kind, counts, total_tpu
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+            unroll: bool = False, profile: str = "baseline"):
+    import dataclasses
+
+    import jax
+
+    from repro import configs
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch import sharding as shd
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import V5E, make_production_mesh, n_chips
+    from repro.launch.roofline import analytic_roofline
+    from repro.models import model as M
+    from repro.models.sharding_ctx import activation_sharding
+
+    cfg = configs.get_config(arch)
+    if unroll:  # validation mode: makes XLA count every layer
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = n_chips(mesh)
+
+    t0 = time.time()
+    fn, args, in_shardings, donate = steps_mod.build(cfg, shape, mesh,
+                                                     profile=profile)
+    rules = shd.activation_rules(mesh, cfg.sequence_parallel)
+    with activation_sharding(mesh, rules, profile=profile):
+        jitted = jax.jit(fn, in_shardings=in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll_raw, coll_kinds, coll_counts, coll_tpu = collective_bytes(hlo)
+
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+
+    # roofline uses the TPU-dtype-adjusted bytes (see _shape_bytes)
+    rl = analytic_roofline(cfg, shape, chips, coll_tpu)
+
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "ok": True,
+        "profile": profile,
+        "unrolled": unroll,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "params": M.n_params(cfg),
+        "active_params": M.n_active_params(cfg),
+        # roofline terms (analytic flops/bytes + parsed collectives)
+        "flops_global": rl.flops,
+        "hbm_bytes_global": rl.hbm_bytes,
+        "collective_bytes_per_device": coll_tpu,
+        "collective_bytes_raw_cpu_hlo": coll_raw,
+        "collective_by_kind": coll_kinds,  # raw CPU-HLO dtypes
+        "collective_counts": coll_counts,
+        "compute_term_s": rl.compute_s,
+        "memory_term_s": rl.memory_s,
+        "collective_term_s": rl.collective_s,
+        "dominant": rl.dominant,
+        "model_flops_global": rl.model_flops,
+        "useful_flops_ratio": rl.useful_ratio,
+        # raw HLO numbers (scan bodies counted once; see EXPERIMENTS.md)
+        "hlo_flops_per_device": hlo_flops,
+        "hlo_bytes_per_device": hlo_bytes,
+        "memory_analysis": mem_d,
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {out['mesh']} ==")
+        print(f"lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print(f"memory_analysis: {mem_d}")
+        print(f"hlo(raw, scan-bodies-once): flops={hlo_flops:.3e} "
+              f"bytes={hlo_bytes:.3e}")
+        print(f"analytic: flops={rl.flops:.3e} hbm_bytes={rl.hbm_bytes:.3e}")
+        print(
+            f"roofline(s/step): compute={rl.compute_s:.4f} "
+            f"memory={rl.memory_s:.4f} collective={rl.collective_s:.4f} "
+            f"dominant={rl.dominant}"
+        )
+        print(f"collectives(per-device B): tpu-adjusted={coll_tpu:.3e} "
+              f"raw-cpu-hlo={coll_raw:.3e} "
+              f"{ {k: f'{v:.2e}' for k, v in coll_kinds.items() if v} }")
+        print(f"useful_flops_ratio={rl.useful_ratio:.3f}")
+    return out
+
+
+def _combo_list():
+    from repro import configs
+    from repro.configs.base import INPUT_SHAPES
+
+    return [(a, s) for a in configs.ARCH_IDS for s in INPUT_SHAPES]
+
+
+def driver(multi_pod_also: bool, only_missing: bool, timeout: int):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    combos = []
+    for a, s in _combo_list():
+        combos.append((a, s, False))
+        if multi_pod_also:
+            combos.append((a, s, True))
+    failures = []
+    for arch, shape, mp in combos:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        out_file = RESULTS / f"{tag}.json"
+        if only_missing and out_file.exists():
+            ok = json.loads(out_file.read_text()).get("ok", False)
+            if ok:
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--json", str(out_file)]
+        if mp:
+            cmd.append("--multi-pod")
+        print(f"[driver] {tag} ...", flush=True)
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+        dt = time.time() - t0
+        if r.returncode != 0:
+            failures.append(tag)
+            err = (r.stderr or "")[-2000:]
+            out_file.write_text(json.dumps(
+                {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if mp else "16x16",
+                 "ok": False, "error": err}, indent=1))
+            print(f"[driver] {tag} FAILED ({dt:.0f}s)\n{err}", flush=True)
+        else:
+            print(f"[driver] {tag} ok ({dt:.0f}s)", flush=True)
+    print(f"[driver] done. {len(failures)} failures: {failures}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--only-missing", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans (flops validation mode)")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--json", help="write result JSON to this path")
+    args = ap.parse_args()
+
+    if args.all:
+        fails = driver(not args.single_pod_only, args.only_missing, args.timeout)
+        sys.exit(1 if fails else 0)
+
+    out = run_one(args.arch, args.shape, args.multi_pod, unroll=args.unroll,
+                  profile=args.profile)
+    if args.json:
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.json).write_text(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

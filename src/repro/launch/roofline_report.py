@@ -1,0 +1,84 @@
+"""Aggregates results/dryrun/*.json into the §Roofline table (markdown) and
+ranks the hillclimb candidates.
+
+  PYTHONPATH=src python -m repro.launch.roofline_report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "16x16", profile: str = "baseline"):
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("mesh") != mesh:
+            continue
+        if (d.get("profile") or "baseline") != profile:
+            continue
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"])))
+    return rows
+
+
+def fmt_row(d):
+    if not d.get("ok"):
+        return f"| {d['arch']} | {d['shape']} | FAILED | | | | | | |"
+    tot = d["compute_term_s"] + d["memory_term_s"] + d["collective_term_s"]
+    frac = max(d["compute_term_s"], d["memory_term_s"],
+               d["collective_term_s"]) / tot if tot else 0
+    mem = d.get("memory_analysis", {})
+    temp = mem.get("temp_bytes")
+    args_b = mem.get("argument_bytes")
+    return (
+        f"| {d['arch']} | {d['shape']} | {d['compute_term_s']:.4f} | "
+        f"{d['memory_term_s']:.4f} | {d['collective_term_s']:.4f} | "
+        f"**{d['dominant']}** | {d['useful_flops_ratio']:.2f} | "
+        f"{(args_b or 0)/1e9:.1f} | {(temp or 0)/1e9:.1f} |"
+    )
+
+
+def efficiency(d):
+    """Step-time lower bound = max term; 'roofline fraction' = compute term
+    over the max (1.0 = perfectly compute-bound)."""
+    mx = max(d["compute_term_s"], d["memory_term_s"], d["collective_term_s"])
+    return d["compute_term_s"] / mx if mx else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+    rows = load(args.mesh, args.profile)
+    print(f"### Roofline table — mesh {args.mesh}, profile {args.profile} "
+          f"(seconds per step; TPU v5e terms)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant |"
+          " useful_flops | args_GB/dev | temp_GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        print(fmt_row(d))
+
+    ok = [d for d in rows if d.get("ok")]
+    print("\n### Hillclimb candidate ranking")
+    worst = sorted(ok, key=efficiency)[:5]
+    print("\nWorst roofline fraction (compute_term / max_term):")
+    for d in worst:
+        print(f"  {d['arch']} x {d['shape']}: frac={efficiency(d):.3f} "
+              f"dominant={d['dominant']}")
+    coll = sorted(ok, key=lambda d: -d["collective_term_s"])[:5]
+    print("\nMost collective-bound (absolute seconds):")
+    for d in coll:
+        print(f"  {d['arch']} x {d['shape']}: "
+              f"coll={d['collective_term_s']:.3f}s "
+              f"(compute={d['compute_term_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Builds jit-able step functions + abstract inputs + shardings for every
+(architecture x input shape) combination. Used by the dry-run, the trainer
+and the benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import sharding as shd
+from repro.models import model as M
+from repro.models.spec import TensorSpec, abstract_params
+from repro.optim import adamw, clip_by_global_norm
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, optimizer=None) -> Callable:
+    opt = optimizer or adamw(3e-4)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        grads = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    if cfg.num_image_tokens:
+        def step(params, tokens, image_embeds):
+            return M.prefill(cfg, params, tokens, image_embeds=image_embeds)
+    else:
+        def step(params, tokens):
+            return M.prefill(cfg, params, tokens)
+    return step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def step(params, cache, tokens):
+        return M.decode_step(cfg, params, cache, tokens)
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# abstract inputs + shardings
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def opt_state_specs(param_specs_tree: Pytree) -> Pytree:
+    """AdamW state spec tree mirroring the params (fp32 moments)."""
+    f32 = lambda s: dataclasses.replace(s, dtype="float32")
+    return {
+        "step": TensorSpec((), (), dtype="int32"),
+        "m": jax.tree.map(f32, param_specs_tree,
+                          is_leaf=lambda x: isinstance(x, TensorSpec)),
+        "v": jax.tree.map(f32, param_specs_tree,
+                          is_leaf=lambda x: isinstance(x, TensorSpec)),
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, TensorSpec]:
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.num_codebooks) if cfg.num_codebooks else (b, s)
+    tok_axes = ("batch", "seq", None) if cfg.num_codebooks else ("batch", "seq")
+    out = {
+        "tokens": TensorSpec(tok_shape, tok_axes, dtype="int32"),
+        "labels": TensorSpec(tok_shape, tok_axes, dtype="int32"),
+    }
+    if cfg.num_image_tokens:
+        out["image_embeds"] = TensorSpec(
+            (b, cfg.num_image_tokens, cfg.d_model), ("batch", None, None),
+            dtype=cfg.dtype,
+        )
+    return out
+
+
+def decode_capacity(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.name == "long_500k" and cfg.long_context == "swa":
+        return cfg.swa_window
+    if shape.name == "long_500k":  # native sub-quadratic
+        return cfg.sliding_window or 2048  # lattn window; ssm ignores capacity
+    return shape.seq_len
+
+
+# decode caches: prefer sharding KV heads over the model axis (GQA archs with
+# kv < 16 fall back to sharding the cache sequence dim instead — distributed
+# softmax — so a 32k x 128 cache never sits replicated on one device)
+CACHE_RULES = dict(
+    shd.ACT_RULES,
+    kv_heads=[("model",)],
+    cache_seq=[("model",)],
+)
+
+
+def build(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+          profile: str = "baseline"):
+    """Returns (fn, args_abstract, in_shardings, donate_argnums).
+
+    profile: "baseline" = the paper-faithful initial sharding;
+             "optimized" = beyond-paper perf profile (§Perf): pure-TP params
+             for decode (no per-step FSDP all-gathers), shard_map MoE
+             dispatch.
+    """
+    assert profile in ("baseline", "optimized"), profile
+    pspecs = M.param_specs(cfg)
+    prules = shd.PARAM_RULES
+    if profile == "optimized" and shape.kind == "decode":
+        prules = shd.DECODE_PARAM_RULES
+    p_sh = shd.tree_shardings(pspecs, mesh, prules)
+    p_abs = abstract_params(pspecs)
+
+    def act_shard(spec_tree):
+        return shd.tree_shardings(spec_tree, mesh, CACHE_RULES)
+
+    if shape.kind == "train":
+        bspecs = batch_specs(cfg, shape)
+        args = (p_abs, abstract_params(opt_state_specs(pspecs)),
+                abstract_params(bspecs))
+        shardings = (
+            p_sh,
+            {
+                "step": NamedSharding(mesh, PartitionSpec()),
+                "m": p_sh,
+                "v": p_sh,
+            },
+            act_shard(bspecs),
+        )
+        return make_train_step(cfg), args, shardings, (0, 1)
+
+    if shape.kind == "prefill":
+        bspecs = batch_specs(cfg, shape)
+        args = [p_abs, abstract_params(bspecs["tokens"])]
+        shardings = [p_sh, act_shard(bspecs["tokens"])]
+        if cfg.num_image_tokens:
+            args.append(abstract_params(bspecs["image_embeds"]))
+            shardings.append(act_shard(bspecs["image_embeds"]))
+        return make_prefill_step(cfg), tuple(args), tuple(shardings), ()
+
+    # decode
+    cap = decode_capacity(cfg, shape)
+    cspecs = M.cache_specs(cfg, shape.global_batch, cap)
+    tok_shape = (
+        (shape.global_batch, 1, cfg.num_codebooks)
+        if cfg.num_codebooks
+        else (shape.global_batch, 1)
+    )
+    tok_spec = TensorSpec(
+        tok_shape,
+        ("batch", None, None) if cfg.num_codebooks else ("batch", None),
+        dtype="int32",
+    )
+    args = (p_abs, abstract_params(cspecs), abstract_params(tok_spec))
+    shardings = (p_sh, act_shard(cspecs), act_shard(tok_spec))
+    return make_decode_step(cfg), args, shardings, (1,)

@@ -1,0 +1,19 @@
+from repro.models.model import (  # noqa: F401
+    cache_specs,
+    decode_step,
+    forward,
+    init,
+    init_cache,
+    loss_fn,
+    n_active_params,
+    n_params,
+    param_specs,
+    prefill,
+)
+from repro.models.spec import (  # noqa: F401
+    TensorSpec,
+    abstract_params,
+    axes_tree,
+    count_params,
+    init_params,
+)

@@ -1,0 +1,85 @@
+"""Common layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, conv1d."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import TensorSpec
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm_spec(dim: int) -> TensorSpec:
+    return TensorSpec((dim,), (None,), init="ones")
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: (..., S, H, D); positions: (S,) int32.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freq[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]  # (1, S, 1, half)
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def mlp_specs(d_model: int, d_ff: int) -> Dict[str, TensorSpec]:
+    return {
+        "w_gate": TensorSpec((d_model, d_ff), ("d_model", "d_ff")),
+        "w_up": TensorSpec((d_model, d_ff), ("d_model", "d_ff")),
+        "w_down": TensorSpec((d_ff, d_model), ("d_ff", "d_model")),
+    }
+
+
+def mlp_apply(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# --------------------------------------------------------------------------
+# temporal conv1d (causal, per-channel), used by SSM and RG-LRU blocks
+# --------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (K, C) depthwise causal conv along S."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K is tiny (4); unrolled adds, fuses well
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return out.astype(x.dtype)
+
+
+def conv1d_step(
+    x_t: jax.Array, conv_cache: jax.Array, w: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step. x_t: (B, C); conv_cache: (B, K-1, C) past inputs."""
+    window = jnp.concatenate([conv_cache, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.sum(window.astype(jnp.float32) * w[None].astype(jnp.float32), axis=1)
+    return out.astype(x_t.dtype), window[:, 1:, :]

@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r/i = sigmoid(linear(u))
+
+Training/prefill evaluates the diagonal linear recurrence with
+jax.lax.associative_scan (log-depth); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import causal_conv1d, conv1d_step
+from repro.models.spec import TensorSpec
+
+Cache = Dict[str, jax.Array]
+
+
+def rglru_specs(cfg: ModelConfig) -> Dict[str, TensorSpec]:
+    d, r = cfg.d_model, cfg.rnn_width
+    k = cfg.conv_kernel
+    return {
+        "w_y": TensorSpec((d, r), ("d_model", "d_inner")),   # gate branch
+        "w_x": TensorSpec((d, r), ("d_model", "d_inner")),   # recurrent branch
+        "conv": TensorSpec((k, r), (None, "d_inner"), scale=0.5),
+        "w_a": TensorSpec((r, r), ("d_inner", None), scale=0.5),
+        "w_i": TensorSpec((r, r), ("d_inner", None), scale=0.5),
+        "Lambda": TensorSpec((r,), (None,), init="rglru_lambda"),
+        "w_out": TensorSpec((r, d), ("d_inner", "d_model")),
+    }
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, TensorSpec]:
+    r, k = cfg.rnn_width, cfg.conv_kernel
+    return {
+        "h": TensorSpec((batch, r), ("batch", "d_inner"), init="zeros",
+                        dtype="float32"),
+        "conv": TensorSpec((batch, k - 1, r), ("batch", None, "d_inner"),
+                           init="zeros"),
+    }
+
+
+def _gates(cfg: ModelConfig, prm, u: jax.Array):
+    """u: (..., r) -> (a, beta*i) in fp32."""
+    r_gate = jax.nn.sigmoid(
+        jnp.einsum("...r,rs->...s", u, prm["w_a"]).astype(jnp.float32)
+    )
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("...r,rs->...s", u, prm["w_i"]).astype(jnp.float32)
+    )
+    log_a = -cfg.rglru_c * jax.nn.softplus(prm["Lambda"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0, 1.0))
+    return a, beta * i_gate
+
+
+def rglru_apply(
+    cfg: ModelConfig,
+    prm: Dict[str, jax.Array],
+    xin: jax.Array,  # (B, S, d)
+    *,
+    cache: Optional[Cache] = None,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    b, s, _ = xin.shape
+    y_gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xin, prm["w_y"]))
+    u_raw = jnp.einsum("bsd,dr->bsr", xin, prm["w_x"])
+
+    decode = cache is not None and s == 1
+    if decode:
+        u, conv_c = conv1d_step(u_raw[:, 0], cache["conv"], prm["conv"])
+        a, bi = _gates(cfg, prm, u)
+        h = a * cache["h"] + bi * u.astype(jnp.float32)
+        y = h[:, None, :].astype(xin.dtype)
+        new_cache = {"h": h, "conv": conv_c}
+    else:
+        u = causal_conv1d(u_raw, prm["conv"])
+        a, bi = _gates(cfg, prm, u)
+        bx = bi * u.astype(jnp.float32)  # (B,S,r)
+        if cache is not None:
+            # fold the incoming state into the first element
+            bx = bx.at[:, 0, :].add(a[:, 0, :] * cache["h"])
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_sc, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        y = h.astype(xin.dtype)
+        if cache is not None:
+            k = cfg.conv_kernel
+            new_cache = {"h": h[:, -1, :], "conv": u_raw[:, s - (k - 1):, :]}
+        else:
+            new_cache = None
+
+    out = jnp.einsum("bsr,rd->bsd", y * y_gate, prm["w_out"])
+    return out, new_cache

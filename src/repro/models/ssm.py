@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation within chunks of length Q, linear recurrence across chunk
+states (lax.scan). Decode is the O(1) state update. ngroups=1.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import causal_conv1d, conv1d_step, rms_norm, rms_norm_spec
+from repro.models.spec import TensorSpec
+
+Cache = Dict[str, jax.Array]
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, TensorSpec]:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.conv_kernel
+    assert din == h * cfg.ssm_head_dim, "d_inner must equal ssm_heads*ssm_head_dim"
+    return {
+        "w_z": TensorSpec((d, din), ("d_model", "d_inner")),
+        "w_x": TensorSpec((d, din), ("d_model", "d_inner")),
+        "w_B": TensorSpec((d, n), ("d_model", None)),
+        "w_C": TensorSpec((d, n), ("d_model", None)),
+        "w_dt": TensorSpec((d, h), ("d_model", "heads")),
+        "conv_x": TensorSpec((k, din), (None, "d_inner"), scale=0.5),
+        "conv_B": TensorSpec((k, n), (None, None), scale=0.5),
+        "conv_C": TensorSpec((k, n), (None, None), scale=0.5),
+        "A_log": TensorSpec((h,), ("heads",), init="zeros"),
+        "D": TensorSpec((h,), ("heads",), init="ones"),
+        "dt_bias": TensorSpec((h,), ("heads",), init="zeros"),
+        "norm": rms_norm_spec(din),
+        "w_out": TensorSpec((din, d), ("d_inner", "d_model")),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, TensorSpec]:
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    k, din = cfg.conv_kernel, cfg.d_inner
+    return {
+        "state": TensorSpec((batch, h, pdim, n), ("batch", "heads", None, None),
+                            init="zeros", dtype="float32"),
+        "conv_x": TensorSpec((batch, k - 1, din), ("batch", None, "d_inner"), init="zeros"),
+        "conv_B": TensorSpec((batch, k - 1, n), ("batch", None, None), init="zeros"),
+        "conv_C": TensorSpec((batch, k - 1, n), ("batch", None, None), init="zeros"),
+    }
+
+
+def _ssd_chunked(
+    x: jax.Array,  # (B,S,H,P)  (already multiplied by dt)
+    a: jax.Array,  # (B,S,H)    log-decay increments (negative)
+    bm: jax.Array,  # (B,S,N)
+    cm: jax.Array,  # (B,S,N)
+    chunk: int,
+    init_state: Optional[jax.Array],  # (B,H,P,N)
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert nc * q == s, f"seq {s} not divisible by ssm chunk {q}"
+    xc = x.reshape(b, nc, q, h, p)
+    ac = a.reshape(b, nc, q, h)
+    bc = bm.reshape(b, nc, q, n)
+    cc = cm.reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(ac, axis=2)  # inclusive (B,nc,Q,H)
+
+    # intra-chunk (the "quadratic branch")
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc).astype(jnp.float32)
+    ldec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,K,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(ldec), 0.0)
+    y_intra = jnp.einsum(
+        "bcqk,bcqkh,bckhp->bcqhp", scores, lmat, xc.astype(jnp.float32)
+    )
+
+    # chunk-boundary states
+    dte = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from pos to chunk end
+    s_chunk = jnp.einsum(
+        "bckn,bckh,bckhp->bchpn", bc.astype(jnp.float32), dte, xc.astype(jnp.float32)
+    )
+    cdec = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) whole-chunk decay
+
+    def step(state, inp):
+        s_c, dec = inp
+        out_prev = state
+        state = dec[:, :, None, None] * state + s_c
+        return state, out_prev
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (s_chunk.transpose(1, 0, 2, 3, 4), cdec.transpose(1, 0, 2))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cc.astype(jnp.float32), jnp.exp(cum), prev_states
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssm_apply(
+    cfg: ModelConfig,
+    prm: Dict[str, jax.Array],
+    xin: jax.Array,  # (B, S, d)
+    *,
+    cache: Optional[Cache] = None,
+) -> Tuple[jax.Array, Optional[Cache]]:
+    b, s, _ = xin.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = jnp.einsum("bsd,de->bse", xin, prm["w_z"])
+    xr = jnp.einsum("bsd,de->bse", xin, prm["w_x"])
+    br = jnp.einsum("bsd,dn->bsn", xin, prm["w_B"])
+    cr = jnp.einsum("bsd,dn->bsn", xin, prm["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", xin, prm["w_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + prm["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a_coef = -jnp.exp(prm["A_log"].astype(jnp.float32))  # (H,)
+
+    decode = cache is not None and s == 1
+    if decode:
+        xs, conv_x = conv1d_step(xr[:, 0], cache["conv_x"], prm["conv_x"])
+        bs_, conv_B = conv1d_step(br[:, 0], cache["conv_B"], prm["conv_B"])
+        cs_, conv_C = conv1d_step(cr[:, 0], cache["conv_C"], prm["conv_C"])
+        xs, bs_, cs_ = jax.nn.silu(xs), jax.nn.silu(bs_), jax.nn.silu(cs_)
+        xh = xs.reshape(b, h, pdim).astype(jnp.float32)
+        dt0 = dt[:, 0]  # (B,H)
+        dec = jnp.exp(a_coef[None] * dt0)  # (B,H)
+        db = dt0[:, :, None, None] * jnp.einsum(
+            "bhp,bn->bhpn", xh, bs_.astype(jnp.float32)
+        )
+        state = dec[:, :, None, None] * cache["state"] + db
+        y = jnp.einsum("bhpn,bn->bhp", state, cs_.astype(jnp.float32))
+        y = y + prm["D"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(b, 1, h * pdim).astype(xin.dtype)
+        new_cache = {"state": state, "conv_x": conv_x, "conv_B": conv_B,
+                     "conv_C": conv_C}
+    else:
+        xs = jax.nn.silu(causal_conv1d(xr, prm["conv_x"]))
+        bs_ = jax.nn.silu(causal_conv1d(br, prm["conv_B"]))
+        cs_ = jax.nn.silu(causal_conv1d(cr, prm["conv_C"]))
+        xh = xs.reshape(b, s, h, pdim)
+        a = a_coef[None, None, :] * dt  # (B,S,H)
+        xdt = xh.astype(jnp.float32) * dt[..., None]
+        y, final_state = _ssd_chunked(
+            xdt.astype(xin.dtype), a, bs_, cs_, cfg.ssm_chunk,
+            cache["state"] if cache is not None else None,
+        )
+        y = y.astype(jnp.float32) + prm["D"].astype(jnp.float32)[
+            None, None, :, None
+        ] * xh.astype(jnp.float32)
+        y = y.reshape(b, s, h * pdim).astype(xin.dtype)
+        if cache is not None:  # prefill: save state + conv tails
+            k = cfg.conv_kernel
+            new_cache = {
+                "state": final_state,
+                "conv_x": xr[:, s - (k - 1):, :],
+                "conv_B": br[:, s - (k - 1):, :],
+                "conv_C": cr[:, s - (k - 1):, :],
+            }
+        else:
+            new_cache = None
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 prm["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, prm["w_out"]), new_cache

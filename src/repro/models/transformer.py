@@ -1,0 +1,178 @@
+"""Composable decoder: block types assembled per the config's block_pattern,
+scanned over repeats (stacked params) with optional remat.
+
+Block types
+  attn   : RMSNorm -> self-attn (full causal)      -> +res ; RMSNorm -> MLP -> +res
+  lattn  : same, sliding-window (cfg.sliding_window)
+  xattn  : RMSNorm -> cross-attn over image/frame embeddings -> +res ; MLP
+  moe    : RMSNorm -> self-attn -> +res ; RMSNorm -> MoE FFN -> +res  (+aux)
+  rglru  : RMSNorm -> RG-LRU recurrent block -> +res ; RMSNorm -> MLP -> +res
+  ssm    : RMSNorm -> mamba2/SSD block -> +res      (no separate MLP)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, mlp_specs, rms_norm, rms_norm_spec
+from repro.models.sharding_ctx import constrain
+from repro.models.spec import TensorSpec, stack_specs
+
+Pytree = Any
+
+
+# --------------------------------------------------------------------------
+# per-block specs
+# --------------------------------------------------------------------------
+def block_param_specs(cfg: ModelConfig, btype: str) -> Dict[str, Pytree]:
+    d = cfg.d_model
+    s: Dict[str, Pytree] = {"ln1": rms_norm_spec(d)}
+    if btype in ("attn", "lattn", "moe"):
+        s["attn"] = attn.attn_specs(cfg)
+        s["ln2"] = rms_norm_spec(d)
+        s["ffn"] = (
+            moe_mod.moe_specs(cfg) if btype == "moe" else mlp_specs(d, cfg.d_ff)
+        )
+    elif btype == "xattn":
+        s["xattn"] = attn.attn_specs(cfg, cross=True)
+        s["ln2"] = rms_norm_spec(d)
+        s["ffn"] = mlp_specs(d, cfg.d_ff)
+    elif btype == "rglru":
+        s["rglru"] = rglru_mod.rglru_specs(cfg)
+        s["ln2"] = rms_norm_spec(d)
+        s["ffn"] = mlp_specs(d, cfg.d_ff)
+    elif btype == "ssm":
+        s["ssm"] = ssm_mod.ssm_specs(cfg)
+    else:
+        raise ValueError(f"unknown block type {btype}")
+    return s
+
+
+def block_cache_specs(
+    cfg: ModelConfig, btype: str, batch: int, capacity: int
+) -> Dict[str, Pytree]:
+    if btype in ("attn", "moe"):
+        return attn.attn_cache_specs(cfg, batch, capacity)
+    if btype == "lattn":
+        cap = min(capacity, cfg.sliding_window or capacity)
+        return attn.attn_cache_specs(cfg, batch, cap)
+    if btype == "xattn":
+        return attn.xattn_cache_specs(cfg, batch)
+    if btype == "rglru":
+        return rglru_mod.rglru_cache_specs(cfg, batch)
+    if btype == "ssm":
+        return ssm_mod.ssm_cache_specs(cfg, batch)
+    raise ValueError(btype)
+
+
+# --------------------------------------------------------------------------
+# per-block application
+# --------------------------------------------------------------------------
+def block_apply(
+    cfg: ModelConfig,
+    btype: str,
+    p: Dict[str, Pytree],
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    t: Optional[jax.Array],
+    cache: Optional[Dict[str, jax.Array]],
+    image_embeds: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]], jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if btype in ("attn", "lattn", "moe"):
+        window = cfg.sliding_window if btype == "lattn" else None
+        y, new_cache = attn.self_attention(
+            cfg, p["attn"], h, positions, window=window, cache=cache, t=t
+        )
+        x = constrain(x + y, ("batch", "seq", "d_model"))
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if btype == "moe":
+            y, aux = moe_mod.moe_apply(cfg, p["ffn"], h)
+        else:
+            y = mlp_apply(p["ffn"], h)
+        x = constrain(x + y, ("batch", "seq", "d_model"))
+    elif btype == "xattn":
+        y, new_cache = attn.cross_attention(cfg, p["xattn"], h, image_embeds, cache)
+        x = constrain(x + y, ("batch", "seq", "d_model"))
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = constrain(x + mlp_apply(p["ffn"], h), ("batch", "seq", "d_model"))
+    elif btype == "rglru":
+        y, new_cache = rglru_mod.rglru_apply(cfg, p["rglru"], h, cache=cache)
+        x = constrain(x + y, ("batch", "seq", "d_model"))
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = constrain(x + mlp_apply(p["ffn"], h), ("batch", "seq", "d_model"))
+    elif btype == "ssm":
+        y, new_cache = ssm_mod.ssm_apply(cfg, p["ssm"], h, cache=cache)
+        x = constrain(x + y, ("batch", "seq", "d_model"))
+    else:
+        raise ValueError(btype)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# stage (scan over repeats of the block pattern)
+# --------------------------------------------------------------------------
+def stage_param_specs(cfg: ModelConfig, pattern, reps: int) -> Pytree:
+    one = {f"b{i}_{bt}": block_param_specs(cfg, bt) for i, bt in enumerate(pattern)}
+    return stack_specs(one, reps) if reps > 1 else stack_specs(one, 1)
+
+
+def stage_cache_specs(cfg, pattern, reps, batch, capacity) -> Pytree:
+    one = {
+        f"b{i}_{bt}": block_cache_specs(cfg, bt, batch, capacity)
+        for i, bt in enumerate(pattern)
+    }
+    return stack_specs(one, reps) if reps > 1 else stack_specs(one, 1)
+
+
+def stage_apply(
+    cfg: ModelConfig,
+    pattern,
+    reps: int,
+    params: Pytree,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    t: Optional[jax.Array] = None,
+    cache: Optional[Pytree] = None,
+    image_embeds: Optional[jax.Array] = None,
+    training: bool = False,
+) -> Tuple[jax.Array, Optional[Pytree], jax.Array]:
+    """Scan the super-block over ``reps``. Returns (x, new_cache, aux_sum)."""
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        p_stk, c_stk = xs
+        new_caches = {}
+        for i, bt in enumerate(pattern):
+            key = f"b{i}_{bt}"
+            c_i = c_stk[key] if c_stk is not None else None
+            h, nc, aux = block_apply(
+                cfg, bt, p_stk[key], h,
+                positions=positions, t=t, cache=c_i, image_embeds=image_embeds,
+            )
+            new_caches[key] = nc if nc is not None else {}
+            aux_acc = aux_acc + aux
+        return (h, aux_acc), new_caches
+
+    if training and cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params, cache)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs,
+        unroll=reps if cfg.scan_unroll else 1,
+    )
+    if cache is None:
+        new_cache = None
+    return x, new_cache, aux

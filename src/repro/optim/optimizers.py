@@ -1,0 +1,130 @@
+"""Pure-JAX optimizers (no external deps). Optimizer state mirrors the param
+tree; moments are fp32 regardless of param dtype (bf16-safe training)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair. update returns (new_params, new_state)."""
+
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
+    name: str = "optimizer"
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Pytree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = _as_schedule(lr)
+
+    def init(params):
+        mom = (
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if momentum
+            else None
+        )
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"],
+                grads,
+            )
+            upd = mom
+        else:
+            mom = None
+            upd = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+            params,
+            upd,
+        )
+        return new_params, {"step": step, "mom": mom}
+
+    return Optimizer(init, update, "sgd")
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    lr_fn = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd_moments(m, v, g):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            return m, v
+
+        mv = jax.tree.map(
+            lambda m, v, g: upd_moments(m, v, g), state["m"], state["v"], grads
+        )
+        m_new = jax.tree.map(lambda t: t[0], mv, is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree.map(lambda t: t[1], mv, is_leaf=lambda x: isinstance(x, tuple))
+
+        def upd_param(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                delta = delta + weight_decay * p32
+            return (p32 - lr_t * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd_param, params, m_new, v_new)
+        return new_params, {"step": step, "m": m_new, "v": v_new}
+
+    return init, update
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    init, update = _adam_core(lr, b1, b2, eps, 0.0)
+    return Optimizer(init, update, "adam")
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    init, update = _adam_core(lr, b1, b2, eps, weight_decay)
+    return Optimizer(init, update, "adamw")

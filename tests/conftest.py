@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; ONLY launch/dryrun.py forces 512
+# host devices (in its own subprocess). Keep XLA deterministic and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,45 @@
+"""Checkpoint roundtrips (incl. bf16 leaves and nested pytrees)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import latest_step, load_checkpoint, save_checkpoint
+
+
+def test_roundtrip_nested_bf16(tmp_path):
+    tree = {
+        "stage0": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                   "b": jnp.ones(4, jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    save_checkpoint(tmp_path, 3, tree)
+    assert latest_step(tmp_path) == 3
+    step, restored = load_checkpoint(tmp_path, like=tree)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_pointer_advances(tmp_path):
+    t = {"w": jnp.zeros(3)}
+    save_checkpoint(tmp_path, 1, t)
+    save_checkpoint(tmp_path, 5, t)
+    assert latest_step(tmp_path) == 5
+    step, _ = load_checkpoint(tmp_path, like=t)
+    assert step == 5
+
+
+def test_load_specific_step(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.full(2, 1.0)})
+    save_checkpoint(tmp_path, 2, {"w": jnp.full(2, 2.0)})
+    _, t1 = load_checkpoint(tmp_path, step=1, like={"w": jnp.zeros(2)})
+    np.testing.assert_array_equal(np.asarray(t1["w"]), 1.0)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(tmp_path, 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(AssertionError):
+        load_checkpoint(tmp_path, like={"w": jnp.zeros((3, 3))})

@@ -1,0 +1,77 @@
+"""The dry-run's HLO collective parser: trip-count multiplication through
+nested while loops, per-kind accounting, and the CPU-f32-promotion
+adjustment (bf16 collectives are measured f32 on the CPU backend; TPU
+moves bf16 — see dryrun._shape_bytes)."""
+import os
+
+import jax
+
+# lock the backend to the real device count BEFORE importing dryrun (which
+# sets XLA_FLAGS=--xla_force_host_platform_device_count=512 for its own
+# subprocess use)
+jax.devices()
+_saved_flags = os.environ.get("XLA_FLAGS")
+
+from repro.launch.dryrun import _shape_bytes, collective_bytes  # noqa: E402
+
+if _saved_flags is None:
+    os.environ.pop("XLA_FLAGS", None)
+else:
+    os.environ["XLA_FLAGS"] = _saved_flags
+
+
+CANNED = """\
+HloModule jit_step
+
+%body.1 (arg.1: f32[8,128]) -> f32[8,128] {
+  %x = f32[8,128]{1,0} parameter(0)
+  %ag = f32[8,128]{1,0} all-gather(%x), dimensions={0}
+  ROOT %r = f32[8,128]{1,0} add(%ag, %ag)
+}
+
+%outer_body (arg.2: f32[8,128]) -> f32[8,128] {
+  %y = f32[8,128]{1,0} parameter(0)
+  %inner = f32[8,128]{1,0} while(%y), body=%body.1, condition=%c1, backend_config={"known_trip_count":{"n":"4"}}
+  %ar = bf16[16,16]{1,0} all-reduce(%z), to_apply=%sum
+  ROOT %r2 = f32[8,128]{1,0} add(%inner, %inner)
+}
+
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %loop = f32[8,128]{1,0} while(%p0), body=%outer_body, condition=%c0, backend_config={"known_trip_count":{"n":"3"}}
+  %rs = f32[32,32]{1,0} reduce-scatter(%w), dimensions={0}
+  ROOT %out = f32[8,128]{1,0} add(%loop, %loop)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("bf16[16,16]") == 16 * 16 * 2
+    assert _shape_bytes("f32[8,128]", tpu_dtype_adjust=True) == 8 * 128 * 2
+    assert _shape_bytes("bf16[16,16]", tpu_dtype_adjust=True) == 16 * 16 * 2
+    assert _shape_bytes("pred[]") == 1  # scalar: one pred byte
+    assert _shape_bytes("nonsense") == 0
+
+
+def test_collective_bytes_trip_counts():
+    total, by_kind, counts, total_tpu = collective_bytes(CANNED)
+    ag = 8 * 128 * 4  # f32
+    ar = 16 * 16 * 2  # bf16
+    rs = 32 * 32 * 4  # f32
+    # inner AG runs 4 (inner) x 3 (outer) = 12 times; AR 3 times; RS once
+    assert by_kind["all-gather"] == ag * 12
+    assert by_kind["all-reduce"] == ar * 3
+    assert by_kind["reduce-scatter"] == rs * 1
+    assert counts["all-gather"] == 12
+    assert counts["all-reduce"] == 3
+    assert total == ag * 12 + ar * 3 + rs
+    # TPU adjustment halves only the f32 entries
+    assert total_tpu == ag * 12 // 2 + ar * 3 + rs // 2
+
+
+def test_collective_bytes_empty():
+    total, by_kind, counts, total_tpu = collective_bytes(
+        "ENTRY %main () -> f32[] {\n ROOT %c = f32[] constant(0)\n}\n")
+    assert total == 0 and total_tpu == 0
+    assert all(v == 0 for v in by_kind.values())

@@ -1,0 +1,65 @@
+"""§5.4: t_pair measurement and t_agg = N*t_pair/(C*N_agg) + M/B_dc."""
+import numpy as np
+import pytest
+
+from repro.core.estimator import (
+    AggregationEstimator,
+    AggregatorResources,
+    measure_t_pair,
+    usable_cores,
+)
+from repro.core.jobspec import FLJobSpec, PartySpec
+
+
+def _job(n=10, model_bytes=1 << 20):
+    return FLJobSpec(
+        job_id="j", model_arch="m", model_bytes=model_bytes,
+        parties={f"p{i}": PartySpec(f"p{i}", epoch_time_s=1.0)
+                 for i in range(n)},
+    )
+
+
+def test_t_agg_formula():
+    res = AggregatorResources(n_aggregators=4, cores_per_aggregator=2,
+                              intra_dc_bw=1e9)
+    est = AggregationEstimator(t_pair_s=0.1, resources=res)
+    job = _job(n=80, model_bytes=500_000_000)
+    expected = (80 * 0.1) / (2 * 4) + 500_000_000 / 1e9
+    assert est.t_agg(job) == pytest.approx(expected)
+
+
+def test_t_agg_partial_updates():
+    est = AggregationEstimator(0.1)
+    job = _job(n=100)
+    assert est.t_agg(job, n_updates=10) < est.t_agg(job)
+
+
+def test_usable_cores_gpu_memory_bound():
+    """§5.4: GPU cores clamped by how many updates fit in memory."""
+    res = AggregatorResources(cores_per_aggregator=1024,
+                              accelerator_mem_bytes=8e9)
+    assert usable_cores(res, model_bytes=int(2e9)) == 3  # 4 fit, minus 1
+    res2 = AggregatorResources(cores_per_aggregator=2)
+    assert usable_cores(res2, model_bytes=int(2e9)) == 2  # CPU: plain cores
+
+
+def test_measure_t_pair_runs_real_fusion():
+    calls = []
+
+    def fuse(a, b):
+        calls.append(1)
+        return a + b
+
+    t = measure_t_pair(fuse, model_bytes=4 * 1000, trials=3)
+    assert t >= 0.0
+    assert len(calls) == 4  # warmup + 3 trials
+
+
+def test_calibration_only_grows_conservatively():
+    est = AggregationEstimator(0.1)
+    job = _job(n=10)
+    est.calibrate(observed_t_agg=10.0, job=job, n_updates=10)
+    assert est.t_pair_s > 0.1  # adjusted upwards toward observation
+    before = est.t_pair_s
+    est.calibrate(observed_t_agg=0.0001, job=job, n_updates=10)
+    assert est.t_pair_s >= before * 0.49  # never collapses on one fast round

@@ -1,0 +1,134 @@
+"""Fusion algorithms: closed-form equivalence, and the LINEARITY properties
+JIT aggregation exploits — incremental == batch, order-independence,
+partial-merge (parallel aggregation) == sequential."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fl.fusion import FedAvg, FedProx, FedSGD, FusionState, get_algorithm
+
+
+def _updates(k=4, seed=0, shapes=((8, 4), (16,), (2, 3, 5))):
+    keys = jax.random.split(jax.random.PRNGKey(seed), k * len(shapes))
+    out = []
+    for i in range(k):
+        out.append({
+            f"w{j}": jax.random.normal(keys[i * len(shapes) + j], s)
+            for j, s in enumerate(shapes)
+        })
+    return out
+
+
+def _closed_form(updates, weights):
+    total = sum(weights)
+    return jax.tree.map(
+        lambda *xs: sum(w * x for w, x in zip(weights, xs)) / total, *updates
+    )
+
+
+def test_fedavg_weighted_mean_closed_form():
+    ups = _updates(4)
+    n_ex = [10, 20, 30, 40]
+    alg = FedAvg()
+    fused = alg.fuse(ups, n_ex)
+    want = _closed_form(ups, [float(n) for n in n_ex])
+    for k in fused:
+        np.testing.assert_allclose(fused[k], want[k], rtol=2e-5, atol=2e-5)
+
+
+def test_fedsgd_applies_gradient_step():
+    model = {"w": jnp.ones((4, 4))}
+    grads = [{"w": jnp.full((4, 4), 2.0)}, {"w": jnp.full((4, 4), 4.0)}]
+    alg = FedSGD()
+    fused = alg.fuse(grads, [1, 1])
+    new = alg.apply(model, fused, lr=0.1)
+    np.testing.assert_allclose(new["w"], 1.0 - 0.1 * 3.0, rtol=1e-6)
+
+
+def test_fedprox_server_side_equals_fedavg():
+    ups = _updates(3)
+    n_ex = [5, 5, 10]
+    a = FedAvg().fuse(ups, n_ex)
+    b = FedProx().fuse(ups, n_ex)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-6)
+
+
+# ---- linearity properties (§2.1 / §4.2) -------------------------------------
+@given(k=st.integers(2, 8), seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_incremental_equals_batch(k, seed):
+    ups = _updates(k, seed=seed, shapes=((6, 7),))
+    ws = list(np.random.default_rng(seed).uniform(1, 100, k))
+    st_ = FusionState()
+    for u, w in zip(ups, ws):
+        st_ = st_.fold(u, w)
+    inc = st_.result()
+    want = _closed_form(ups, ws)
+    np.testing.assert_allclose(inc["w0"], want["w0"], rtol=2e-4, atol=2e-4)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_fusion_order_independent(seed):
+    ups = _updates(5, seed=seed, shapes=((11,),))
+    ws = [1.0, 2.0, 3.0, 4.0, 5.0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(5)
+    a = FusionState()
+    for u, w in zip(ups, ws):
+        a = a.fold(u, w)
+    b = FusionState()
+    for i in perm:
+        b = b.fold(ups[i], ws[i])
+    np.testing.assert_allclose(a.result()["w0"], b.result()["w0"],
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(k=st.integers(3, 9), n_shards=st.integers(2, 4),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_parallel_partials_merge_equals_sequential(k, n_shards, seed):
+    """Parallel aggregation (§5.4): shard updates across workers, merge the
+    partial FusionStates — identical to one sequential pass."""
+    ups = _updates(k, seed=seed, shapes=((9,),))
+    ws = list(np.random.default_rng(seed).uniform(1, 10, k))
+    seq = FusionState()
+    for u, w in zip(ups, ws):
+        seq = seq.fold(u, w)
+    partials = []
+    for s in range(n_shards):
+        p = FusionState()
+        for u, w in list(zip(ups, ws))[s::n_shards]:
+            p = p.fold(u, w)
+        partials.append(p)
+    merged = partials[0]
+    for p in partials[1:]:
+        merged = merged.merge(p)
+    np.testing.assert_allclose(merged.result()["w0"], seq.result()["w0"],
+                               rtol=2e-4, atol=2e-4)
+    assert merged.n_fused == seq.n_fused == k
+
+
+def test_checkpoint_resume_roundtrip():
+    """Preemption (§5.5): a checkpointed partial aggregate resumes to the
+    same final result."""
+    ups = _updates(6, shapes=((5, 5),))
+    ws = [1.0] * 6
+    direct = FusionState()
+    for u, w in zip(ups, ws):
+        direct = direct.fold(u, w)
+    # interrupt after 3, "checkpoint" (it's a value), resume
+    part = FusionState()
+    for u, w in list(zip(ups, ws))[:3]:
+        part = part.fold(u, w)
+    snap = {"acc": part.acc, "total_weight": part.total_weight,
+            "n_fused": part.n_fused}
+    resumed = FusionState(**snap)
+    for u, w in list(zip(ups, ws))[3:]:
+        resumed = resumed.fold(u, w)
+    np.testing.assert_allclose(resumed.result()["w0"], direct.result()["w0"],
+                               rtol=1e-5)

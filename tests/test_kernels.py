@@ -1,0 +1,104 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp ref oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.fused_agg import fused_agg
+from repro.kernels.pair_fuse import pair_fuse
+from repro.kernels.quant_agg import quant_agg, quantize
+
+SHAPES_KN = [(1, 17), (3, 1000), (8, 2048), (5, 3001), (16, 10_000),
+             (33, 4096)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("k,n", SHAPES_KN)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_agg_matches_ref(k, n, dtype):
+    key = jax.random.PRNGKey(k * 1000 + n)
+    u = jax.random.normal(key, (k, n), jnp.float32).astype(dtype)
+    w = jnp.asarray(np.random.default_rng(0).dirichlet(np.ones(k)),
+                    jnp.float32)
+    got = fused_agg(u, w)
+    want = ref.fused_agg_ref(u, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("bn,kb", [(1024, 4), (2048, 8), (4096, 16)])
+def test_fused_agg_block_shape_sweep(bn, kb):
+    u = jax.random.normal(jax.random.PRNGKey(0), (10, 5000), jnp.float32)
+    w = jnp.full((10,), 0.1, jnp.float32)
+    got = fused_agg(u, w, bn=bn, kb=kb)
+    np.testing.assert_allclose(got, ref.fused_agg_ref(u, w), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 100, 8192, 8193, 50_000])
+@pytest.mark.parametrize("op", ["mean", "wsum", "max", "min"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pair_fuse_matches_ref(n, op, dtype):
+    ka, kb_ = jax.random.split(jax.random.PRNGKey(n))
+    a = jax.random.normal(ka, (n,), jnp.float32).astype(dtype)
+    b = jax.random.normal(kb_, (n,), jnp.float32).astype(dtype)
+    got = pair_fuse(a, b, op=op, wa=0.3, wb=0.7)
+    want = ref.pair_fuse_ref(a, b, op, 0.3, 0.7)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("k,n", [(2, 100), (40, 5000), (64, 4096)])
+def test_quant_agg_matches_ref(k, n):
+    q = jax.random.randint(jax.random.PRNGKey(1), (k, n), -127, 128,
+                           dtype=jnp.int8)
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (k,))) * 0.01
+    np.testing.assert_allclose(
+        quant_agg(q, s), ref.quant_agg_ref(q, s), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(3), (10_000,)) * 5
+    q, s = quantize(x)
+    err = np.abs(np.asarray(q, np.float32) * float(s) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+# ---- properties ------------------------------------------------------------
+@given(
+    k=st.integers(1, 12),
+    n=st.integers(1, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_fused_agg_weighted_mean_bounds(k, n, seed):
+    """A convex combination never exceeds the per-coordinate min/max."""
+    u = jax.random.normal(jax.random.PRNGKey(seed), (k, n), jnp.float32)
+    w = jnp.full((k,), 1.0 / k, jnp.float32)
+    got = np.asarray(fused_agg(u, w))
+    lo = np.asarray(jnp.min(u, axis=0))
+    hi = np.asarray(jnp.max(u, axis=0))
+    assert (got >= lo - 1e-5).all() and (got <= hi + 1e-5).all()
+
+
+@given(n=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_pair_fuse_commutative_ops(n, seed):
+    ka, kb_ = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (n,), jnp.float32)
+    b = jax.random.normal(kb_, (n,), jnp.float32)
+    for op in ["mean", "max", "min"]:
+        np.testing.assert_allclose(
+            pair_fuse(a, b, op=op), pair_fuse(b, a, op=op), rtol=1e-6
+        )

@@ -1,0 +1,20 @@
+"""The train/serve launchers execute real steps on reduced configs."""
+import pytest
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+
+@pytest.mark.slow
+def test_train_launcher_reduced():
+    rc = train_mod.main(["--arch", "qwen3-0.6b", "--reduced", "--steps", "2",
+                         "--seq-len", "64", "--batch", "4"])
+    assert rc == 0
+
+
+@pytest.mark.slow
+def test_serve_launcher_reduced():
+    rc = serve_mod.main(["--arch", "qwen3-0.6b", "--reduced",
+                         "--prompt-len", "8", "--tokens", "3",
+                         "--batch", "2"])
+    assert rc == 0

@@ -1,0 +1,165 @@
+"""§4/§5.3: periodicity + linearity estimators and t_upd/t_rnd prediction."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.jobspec import FLJobSpec, PartySpec
+from repro.core.prediction import (
+    DEFAULT_HARDWARE_THROUGHPUT,
+    LinearEstimator,
+    PeriodicTracker,
+    UpdatePredictor,
+)
+
+
+# -- linearity: exact recovery of linear relationships (paper Fig. 4) --------
+@given(
+    slope=st.floats(0.01, 100),
+    intercept=st.floats(-10, 10),
+    xs=st.lists(st.floats(1, 1e4), min_size=2, max_size=50, unique=True),
+)
+@settings(max_examples=50, deadline=None)
+def test_linear_estimator_recovers_exact_fit(slope, intercept, xs):
+    est = LinearEstimator()
+    for x in xs:
+        est.observe(x, slope * x + intercept)
+    assert math.isclose(est.slope, slope, rel_tol=1e-6, abs_tol=1e-6)
+    pred = est.predict(1234.5)
+    assert math.isclose(pred, slope * 1234.5 + intercept,
+                        rel_tol=1e-6, abs_tol=1e-4)
+
+
+def test_linear_estimator_single_point_is_constant():
+    est = LinearEstimator()
+    est.observe(10.0, 42.0)
+    assert est.predict(99.0) == 42.0
+
+
+def test_linear_estimator_raises_without_data():
+    with pytest.raises(ValueError):
+        LinearEstimator().predict(1.0)
+
+
+# -- periodicity: constant epoch times are detected as stable (Fig. 3) --------
+def test_periodic_tracker_stability():
+    tr = PeriodicTracker()
+    for _ in range(10):
+        tr.observe(60.0)
+    assert tr.is_stable()
+    assert tr.predict() == pytest.approx(60.0)
+
+    tr2 = PeriodicTracker()
+    for t in [10, 200, 15, 300, 20]:
+        tr2.observe(t)
+    assert not tr2.is_stable()
+
+
+@given(base=st.floats(1, 1000), noise=st.floats(0, 0.02))
+@settings(max_examples=30, deadline=None)
+def test_periodic_tracker_converges_to_mean(base, noise):
+    rng = np.random.default_rng(0)
+    tr = PeriodicTracker()
+    for _ in range(30):
+        tr.observe(base * (1 + rng.normal(0, noise)))
+    assert tr.predict() == pytest.approx(base, rel=0.1)
+
+
+# -- t_train / t_comm / t_upd / t_rnd (Fig. 6 lines 6-11) ----------------------
+def _job(**party_kw):
+    p = PartySpec("p0", **party_kw)
+    return FLJobSpec(
+        job_id="j", model_arch="m", model_bytes=100 * 1024 * 1024,
+        parties={"p0": p}, t_wait_s=600.0,
+    )
+
+
+def test_t_train_epoch_time_direct():
+    job = _job(epoch_time_s=120.0, dataset_size=1000)
+    pred = UpdatePredictor(job)
+    assert pred.t_train("p0") == 120.0
+
+
+def test_t_train_minibatch_frequency():
+    job = _job(minibatch_time_s=0.5, dataset_size=3200, batch_size=32)
+    job.sync_frequency = 10
+    pred = UpdatePredictor(job)
+    assert pred.t_train("p0") == pytest.approx(5.0)
+
+
+def test_t_train_epoch_from_minibatch():
+    job = _job(minibatch_time_s=0.5, dataset_size=3200, batch_size=32)
+    pred = UpdatePredictor(job)
+    assert pred.t_train("p0") == pytest.approx(0.5 * 100)
+
+
+def test_t_train_intermittent_is_t_wait():
+    job = _job(mode="intermittent")
+    pred = UpdatePredictor(job)
+    assert pred.t_train("p0") == 600.0
+
+
+def test_t_train_hardware_regression_fallback():
+    job = _job(hardware="gpu-k80", dataset_size=1200)
+    pred = UpdatePredictor(job)
+    expect = 1200 / DEFAULT_HARDWARE_THROUGHPUT["gpu-k80"]
+    assert pred.t_train("p0") == pytest.approx(expect)
+
+
+def test_t_comm_uses_both_directions():
+    job = _job(epoch_time_s=10.0, bw_down=10e6, bw_up=5e6)
+    pred = UpdatePredictor(job)
+    m = job.model_bytes
+    assert pred.t_comm("p0") == pytest.approx(m / 10e6 + m / 5e6)
+    assert pred.t_upd("p0") == pytest.approx(10.0 + m / 10e6 + m / 5e6)
+
+
+def test_t_rnd_is_max_over_parties():
+    parties = {
+        f"p{i}": PartySpec(f"p{i}", epoch_time_s=float(10 * (i + 1)))
+        for i in range(5)
+    }
+    job = FLJobSpec(job_id="j", model_arch="m", model_bytes=1,
+                    parties=parties)
+    pred = UpdatePredictor(job)
+    assert pred.t_rnd() == max(pred.t_upd(f"p{i}") for i in range(5))
+
+
+def test_observation_feedback_overrides_spec():
+    """Periodicity: after stable observations, the tracker wins (adapts to
+    drift from the initially-declared epoch time)."""
+    job = _job(epoch_time_s=120.0, dataset_size=1000)
+    pred = UpdatePredictor(job)
+    for _ in range(5):
+        pred.observe_round("p0", 80.0)
+    assert pred.t_train("p0") == pytest.approx(80.0, rel=0.01)
+
+
+def test_linearity_dataset_growth_regression():
+    """Paper: 'even when training data changes, linear regression can be
+    used to predict new epoch times from previous measurements'."""
+    job = _job(hardware="cpu-2vcpu", dataset_size=1000)
+    pred = UpdatePredictor(job)
+    # noisy-free linear history: epoch_time = 0.1 * dataset_size
+    for n in [500, 800, 1000, 1500]:
+        pred.lin_data["p0"].observe(n, 0.1 * n)
+    job.parties["p0"].dataset_size = 3000
+    job.parties["p0"].epoch_time_s = None
+    assert pred._regress_epoch_time(job.parties["p0"]) == pytest.approx(300.0)
+
+
+def test_linearity_regression_tracks_dataset_drift():
+    """§4.2: when the reported dataset size changes, the size-aware linear
+    regression must beat both the static spec time and the EWMA tracker."""
+    from benchmarks.drift import simulate
+
+    errs = simulate(growth=0.05, seed=3)
+    import numpy as np
+
+    ours = float(np.mean(errs["ours"][3:]))
+    ewma = float(np.mean(errs["ewma"][3:]))
+    static = float(np.mean(errs["spec-static"][3:]))
+    assert ours < 0.05  # within 5% of truth despite 5%/round drift
+    assert ours < ewma < static

@@ -1,0 +1,225 @@
+"""§3/§5/§6: the five aggregation strategies and the paper's core claims,
+as invariants over the discrete-event simulation."""
+import numpy as np
+import pytest
+
+from repro.core import FLJobSpec, PartySpec, run_strategy
+from repro.core.metrics import savings
+
+
+def make_job(n=50, mode="active", hetero=True, rounds=10, seed=0,
+             model_mb=100):
+    rng = np.random.default_rng(seed)
+    parties = {}
+    for i in range(n):
+        pid = f"p{i}"
+        if mode == "intermittent":
+            parties[pid] = PartySpec(pid, mode="intermittent",
+                                     dataset_size=1000)
+        else:
+            base = float(rng.uniform(60, 180)) if hetero else 90.0
+            parties[pid] = PartySpec(pid, epoch_time_s=base,
+                                     dataset_size=1000)
+    return FLJobSpec(
+        job_id=f"job-{mode}-{n}", model_arch="x",
+        model_bytes=model_mb << 20, rounds=rounds,
+        t_wait_s=600.0 if mode == "intermittent" else None,
+        parties=parties,
+    )
+
+
+def run_all(job_kw=None, **kw):
+    out = {}
+    for s in ["eager_ao", "eager_serverless", "batched", "lazy", "jit"]:
+        out[s] = run_strategy(make_job(**(job_kw or {})), s,
+                              t_pair_s=0.05, **kw)
+    return out
+
+
+@pytest.fixture(scope="module")
+def active_results():
+    return run_all({"mode": "active", "hetero": True})
+
+
+@pytest.fixture(scope="module")
+def intermittent_results():
+    return run_all({"mode": "intermittent"})
+
+
+def test_all_rounds_complete(active_results, intermittent_results):
+    for res in (active_results, intermittent_results):
+        for m in res.values():
+            assert m.rounds_done == 10
+            assert m.updates_received == 50 * 10
+
+
+def test_paper_claim_jit_latency_close_to_eager(active_results):
+    """Central thesis (§6.4): JIT latency is comparable to eager, far below
+    lazy."""
+    jit = active_results["jit"].mean_latency
+    lazy = active_results["lazy"].mean_latency
+    eager_l = active_results["eager_serverless"].mean_latency
+    assert jit <= eager_l + 1.0
+    assert jit < lazy
+
+
+def test_paper_claim_resource_ordering_active(active_results):
+    """Fig. 9 ordering: AO most expensive; JIT saves vs batched and eager."""
+    cs = {k: v.container_seconds for k, v in active_results.items()}
+    assert cs["eager_ao"] > cs["eager_serverless"]
+    assert cs["jit"] < cs["eager_serverless"]
+    assert cs["jit"] < cs["batched"]
+    assert savings(active_results["eager_ao"], active_results["jit"]) > 60.0
+
+
+def test_paper_claim_intermittent_ao_is_pathological(intermittent_results):
+    """Fig. 9: always-on wastes the whole t_wait window (>99% savings)."""
+    assert savings(intermittent_results["eager_ao"],
+                   intermittent_results["jit"]) > 95.0
+
+
+def test_jit_defers_but_meets_t_wait(intermittent_results):
+    """§4.3 SLA: aggregation completes within the round window."""
+    m = intermittent_results["jit"]
+    # latency after last arrival stays small relative to t_wait
+    assert m.p95_latency < 0.1 * 600.0
+
+
+def test_lazy_latency_grows_with_parties():
+    """§3: lazy aggregation latency grows quickly with party count."""
+    small = run_strategy(make_job(n=10, rounds=3), "lazy", t_pair_s=0.05)
+    big = run_strategy(make_job(n=500, rounds=3), "lazy", t_pair_s=0.05)
+    assert big.mean_latency > small.mean_latency * 3
+
+
+def test_jit_latency_stable_with_parties():
+    """§6.4: JIT keeps performing as the number of parties rises."""
+    small = run_strategy(make_job(n=10, rounds=3), "jit", t_pair_s=0.05)
+    big = run_strategy(make_job(n=500, rounds=3), "jit", t_pair_s=0.05)
+    assert big.mean_latency < small.mean_latency + 5.0
+
+
+def test_deterministic_given_seed():
+    a = run_strategy(make_job(), "jit", t_pair_s=0.05, seed=7)
+    b = run_strategy(make_job(), "jit", t_pair_s=0.05, seed=7)
+    assert a.round_latencies == b.round_latencies
+    assert a.container_seconds == b.container_seconds
+
+
+def test_jit_few_deployments_per_round():
+    """JIT defers to ~one deployment burst per round (plus a bounded number
+    of straggler redeploys under the keep-alive economics)."""
+    m = run_strategy(make_job(rounds=5), "jit", t_pair_s=0.05)
+    assert m.jit_deploys >= 5  # at least one per round
+    assert m.jit_deploys <= 5 * 6  # bounded tail redeploys
+    eager = run_strategy(make_job(rounds=5), "eager_serverless", t_pair_s=0.05)
+    assert m.jit_deploys < eager.n_deploys
+
+
+def test_homogeneous_parties_cluster_arrivals():
+    """Active homogeneous: arrivals cluster, so even eager-serverless uses
+    few deployments; JIT still wins (paper's 60-75% band vs eager-λ holds
+    for the heterogeneous/realistic case, ~30%+ here)."""
+    res = {
+        s: run_strategy(make_job(hetero=False), s, t_pair_s=0.05)
+        for s in ["eager_serverless", "jit"]
+    }
+    assert res["jit"].container_seconds < res["eager_serverless"].container_seconds
+
+
+def _paper_band_run(mode, n, rounds=10):
+    """Run all strategies with the paper-realistic parameterisation used by
+    benchmarks/workloads.py (EfficientNet-B7: 264 MB update, memory-bound
+    fusion ~10 GB/s, object-store state load/checkpoint ~1 GB/s)."""
+    from repro.core.cluster import ClusterConfig
+
+    cc = ClusterConfig(deploy_overhead_s=0.5, state_load_s=0.264,
+                       checkpoint_s=0.264)
+    job_kw = dict(mode=mode, n=n, rounds=rounds, model_mb=252)
+    bt = {10: 2, 100: 10, 1000: 100}[n]
+    return {
+        s: run_strategy(make_job(**job_kw), s, t_pair_s=0.079,
+                        cluster_config=cc, batch_trigger=bt, noise_rel=0.05)
+        for s in ["eager_ao", "eager_serverless", "batched", "jit"]
+    }
+
+
+def test_fig9_band_intermittent():
+    """Fig. 9 bands, intermittent parties: JIT saves vs batch, 60%+ vs
+    eager-serverless, >99% vs always-on."""
+    res = _paper_band_run("intermittent", 100)
+    assert savings(res["batched"], res["jit"]) > 0.0
+    assert savings(res["eager_serverless"], res["jit"]) > 60.0
+    assert savings(res["eager_ao"], res["jit"]) > 99.0
+
+
+def test_fig9_band_active_hetero():
+    """Fig. 9 bands, active heterogeneous parties: JIT saves 25%+ vs batch,
+    60%+ vs eager-serverless, 90%+ vs always-on."""
+    res = _paper_band_run("active", 100)
+    assert savings(res["batched"], res["jit"]) > 25.0
+    assert savings(res["eager_serverless"], res["jit"]) > 60.0
+    assert savings(res["eager_ao"], res["jit"]) > 90.0
+
+
+def test_fig78_jit_latency_negligible():
+    """Figs. 7/8: JIT aggregation latency stays within single-digit seconds
+    of eager strategies — negligible relative to the round length."""
+    for mode, round_scale in [("active", 180.0), ("intermittent", 600.0)]:
+        res = _paper_band_run(mode, 100)
+        assert res["jit"].mean_latency < 0.05 * round_scale
+        assert (res["jit"].mean_latency
+                <= res["eager_serverless"].mean_latency + 5.0)
+
+
+def test_jit_orderstat_policy_cuts_intermittent_tail_latency():
+    """Beyond-paper: the order-statistic/backlog-fill policy dominates the
+    literal Fig. 6 timer on intermittent p95 latency at equal-ish cost."""
+    from repro.core.cluster import ClusterConfig
+
+    cc = ClusterConfig(deploy_overhead_s=0.5, state_load_s=0.264,
+                       checkpoint_s=0.264)
+    kw = dict(t_pair_s=0.079, cluster_config=cc, batch_trigger=10,
+              noise_rel=0.05)
+    paper = run_strategy(make_job(mode="intermittent", n=100, rounds=20),
+                         "jit", jit_policy="paper", **kw)
+    ostat = run_strategy(make_job(mode="intermittent", n=100, rounds=20),
+                         "jit", jit_policy="orderstat", **kw)
+    assert ostat.p95_latency <= paper.p95_latency + 1e-9
+    assert ostat.container_seconds <= paper.container_seconds * 1.6
+
+
+def test_hierarchical_topology_conserves_rounds_and_cuts_wan():
+    """Beyond-paper: edge->cloud JIT aggregation completes the same rounds,
+    keeps cloud latency comparable, and cuts WAN ingress by ~N/E."""
+    from benchmarks.hierarchical import ROUNDS, flat, hierarchical
+
+    f = flat(48)
+    h = hierarchical(48, 4)
+    assert h["cloud_wan_MB_per_round"] * 10 < f["cloud_wan_MB_per_round"]
+    assert h["cloud_agg_latency_s"] < f["cloud_agg_latency_s"] + 5.0
+    assert h["usd_per_round"] < f["usd_per_round"]
+    # round pipeline stays coupled: same number of global rounds completed
+    assert abs(h["round_s"] - f["round_s"]) < 0.3 * f["round_s"]
+
+
+def test_dropout_with_quorum_closes_rounds_at_t_wait():
+    """§4.3/§5.1: parties that miss the t_wait window are ignored; the round
+    closes at the boundary when quorum holds, and a below-quorum round is
+    recorded as a failure — no strategy ever deadlocks."""
+    job_kw = dict(mode="intermittent", n=40, rounds=6)
+    for s in ["eager_ao", "eager_serverless", "batched", "lazy", "jit"]:
+        job = make_job(**job_kw)
+        job.quorum_fraction = 0.5
+        m = run_strategy(job, s, t_pair_s=0.05, dropout_prob=0.3, seed=11)
+        assert m.rounds_done == 6, s
+        assert m.dropped_updates > 0, s
+        assert m.updates_received + m.dropped_updates == 40 * 6, s
+
+
+def test_quorum_failure_recorded():
+    job = make_job(mode="intermittent", n=10, rounds=8)
+    job.quorum_fraction = 0.95  # any dropout fails the round
+    m = run_strategy(job, "jit", t_pair_s=0.05, dropout_prob=0.5, seed=2)
+    assert m.rounds_done == 8
+    assert m.quorum_failures > 0

@@ -1,0 +1,87 @@
+"""Property-based invariants of the aggregation-strategy engine: for ANY
+job shape / strategy / seed, the simulation must conserve updates, bill
+no-less-than the pure fuse work, respect latency >= 0, and JIT must meet
+the intermittent SLA window."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import FLJobSpec, PartySpec, run_strategy
+from repro.core.cluster import ClusterConfig
+from repro.core.estimator import AggregationEstimator, usable_cores
+
+STRATS = ["eager_ao", "eager_serverless", "batched", "lazy", "jit"]
+
+
+def _job(n, mode, rounds, seed, t_wait=300.0):
+    rng = np.random.default_rng(seed)
+    parties = {}
+    for i in range(n):
+        pid = f"p{i}"
+        if mode == "intermittent":
+            parties[pid] = PartySpec(pid, mode="intermittent", dataset_size=100)
+        else:
+            parties[pid] = PartySpec(
+                pid, epoch_time_s=float(rng.uniform(20, 120)), dataset_size=100
+            )
+    return FLJobSpec(
+        job_id=f"prop-{mode}-{n}-{seed}", model_arch="x",
+        model_bytes=50 << 20, rounds=rounds,
+        t_wait_s=t_wait if mode == "intermittent" else None,
+        parties=parties,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 60),
+    mode=st.sampled_from(["active", "intermittent"]),
+    strategy=st.sampled_from(STRATS),
+    rounds=st.integers(1, 4),
+    seed=st.integers(0, 999),
+    t_pair=st.floats(0.005, 0.3),
+    batch_trigger=st.integers(1, 20),
+)
+def test_engine_invariants(n, mode, strategy, rounds, seed, t_pair,
+                           batch_trigger):
+    m = run_strategy(_job(n, mode, rounds, seed), strategy,
+                     t_pair_s=t_pair, batch_trigger=batch_trigger, seed=seed)
+    # conservation: every update of every round processed exactly once
+    assert m.rounds_done == rounds
+    assert m.updates_received == n * rounds
+    # latency is well-defined and non-negative
+    assert len(m.round_latencies) == rounds
+    assert all(lat >= -1e-9 for lat in m.round_latencies)
+    # billing floor: total container time >= pure fuse work
+    est = AggregationEstimator(t_pair)
+    w_u = t_pair / usable_cores(est.resources, 50 << 20)
+    if strategy != "eager_ao":  # AO bills wall-clock, trivially above work
+        assert m.container_seconds >= n * rounds * w_u - 1e-6
+    assert m.cost_usd >= 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    seed=st.integers(0, 999),
+    jit_policy=st.sampled_from(["paper", "orderstat"]),
+)
+def test_jit_meets_intermittent_sla(n, seed, jit_policy):
+    """§4.3: aggregation completes within the t_wait round window (plus the
+    final fuse+checkpoint of a last-moment arrival)."""
+    t_wait = 300.0
+    m = run_strategy(_job(n, "intermittent", 3, seed, t_wait), "jit",
+                     t_pair_s=0.02, seed=seed, jit_policy=jit_policy)
+    cc = ClusterConfig()
+    slack = (cc.deploy_overhead_s + cc.state_load_s + cc.checkpoint_s
+             + n * 0.02 + 1.0)
+    assert all(lat <= slack for lat in m.round_latencies)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 50), seed=st.integers(0, 99))
+def test_jit_never_costlier_than_always_on(n, seed):
+    job_kw = dict(n=n, mode="intermittent", rounds=2, seed=seed)
+    jit = run_strategy(_job(**job_kw), "jit", t_pair_s=0.05, seed=seed)
+    ao = run_strategy(_job(**job_kw), "eager_ao", t_pair_s=0.05, seed=seed)
+    assert jit.container_seconds <= ao.container_seconds + 1e-6

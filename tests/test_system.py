@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the paper's system: the full loop of
+spec -> prediction -> JIT schedule -> queue -> kernel fusion -> new global
+model, plus cross-strategy consistency of the fused MODEL (scheduling
+changes WHEN aggregation runs, never WHAT it computes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import FLJobSpec, PartySpec, run_strategy
+from repro.core.queue import MessageQueue
+from repro.fl.aggregator import AggregationExecutor
+from repro.models import model as M
+
+configs.load_all()
+
+
+def test_fused_model_independent_of_strategy_order():
+    """The paper's linearity argument (§2.1): aggregation is order- and
+    batching-independent, so eager/batched/lazy/JIT all produce the same
+    global model for the same updates."""
+    cfg = configs.get_config("qwen3-0.6b").reduced(
+        num_layers=2, d_model=64, vocab_size=128
+    )
+    gp = M.init(cfg, jax.random.PRNGKey(0))
+    updates = [jax.tree.map(lambda p, i=i: p + 0.01 * (i + 1), gp)
+               for i in range(6)]
+    nex = [10, 20, 30, 10, 20, 30]
+
+    # eager: one at a time in arrival order
+    eager = AggregationExecutor("e", "fedavg")
+    fused_eager = eager.aggregate(updates, nex)
+    # batched + preemption: two batches, checkpoint/resume between them
+    q = MessageQueue()
+    batched = AggregationExecutor("b", "fedavg", q)
+    for i, (u, n) in enumerate(zip(updates, nex)):
+        q.publish_update("b", f"p{i}", u, 0, n)
+    batched.drain(0, max_messages=3)
+    batched.checkpoint()
+    resumed = AggregationExecutor("b", "fedavg", q)
+    assert resumed.resume()
+    resumed.drain(0)
+    fused_batched = resumed.finish_round(gp, 0)
+    # lazy: all at once, reversed order
+    lazy = AggregationExecutor("l", "fedavg")
+    fused_lazy = lazy.aggregate(list(reversed(updates)),
+                                list(reversed(nex)))
+    for a, b_, c in zip(jax.tree.leaves(fused_eager),
+                        jax.tree.leaves(fused_batched),
+                        jax.tree.leaves(fused_lazy)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=5e-3, atol=8e-3)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=5e-3, atol=8e-3)
+
+
+def test_paper_table_bands_hold_at_scale():
+    """Fig. 9 bands at 100 parties, active heterogeneous: JIT saves >=60%
+    vs eager-serverless and >=85% vs always-on (paper: 70-78% / ~90%+)."""
+    rng = np.random.default_rng(0)
+    parties = {
+        f"p{i}": PartySpec(
+            f"p{i}",
+            epoch_time_s=float(np.exp(rng.uniform(np.log(200), np.log(900)))),
+            dataset_size=1000,
+        )
+        for i in range(100)
+    }
+    job_kw = dict(model_arch="effb7", model_bytes=264_000_000, rounds=10)
+    # paper-realistic parameterisation (see benchmarks/workloads.py):
+    # memory-bound fusion at ~10 GB/s, per-deploy state load/checkpoint
+    # through the object store at ~1 GB/s
+    from repro.core.cluster import ClusterConfig
+
+    cc = ClusterConfig(deploy_overhead_s=0.5, state_load_s=0.264,
+                       checkpoint_s=0.264)
+    res = {}
+    for s in ["eager_ao", "eager_serverless", "jit"]:
+        job = FLJobSpec(job_id=f"tb-{s}", parties=dict(parties), **job_kw)
+        res[s] = run_strategy(job, s, t_pair_s=0.08, cluster_config=cc,
+                              batch_trigger=10, noise_rel=0.05)
+    sav_eager = 1 - res["jit"].container_seconds / res[
+        "eager_serverless"].container_seconds
+    sav_ao = 1 - res["jit"].container_seconds / res["eager_ao"].container_seconds
+    assert sav_eager >= 0.60, sav_eager
+    assert sav_ao >= 0.85, sav_ao
+    # and latency did not blow up vs eager (paper: negligible impact)
+    assert res["jit"].mean_latency <= res["eager_serverless"].mean_latency + 5.0
+
+
+def test_quantized_updates_compatible_with_fusion():
+    """Beyond-paper: int8 party updates fuse to within quantisation error."""
+    from repro.kernels import fuse_quantized, fuse_updates, quantize_update
+
+    cfg = configs.get_config("qwen3-0.6b").reduced(
+        num_layers=1, d_model=64, vocab_size=128
+    )
+    gp = M.init(cfg, jax.random.PRNGKey(0))
+    ups = [jax.tree.map(lambda p, i=i: p * (1 + 0.02 * i), gp)
+           for i in range(3)]
+    w = [0.5, 0.3, 0.2]
+    exact = fuse_updates(ups, w)
+    qs, ss = zip(*(quantize_update(u) for u in ups))
+    approx = fuse_quantized(list(qs), list(ss), w)
+    for a, b in zip(jax.tree.leaves(exact), jax.tree.leaves(approx)):
+        err = np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))
+        assert err.max() < 0.02

@@ -26,7 +26,10 @@ from repro.core.cluster import Cluster, ClusterConfig
 from repro.core.estimator import AggregationEstimator
 from repro.core.events import Simulator
 from repro.core.jobspec import FLJobSpec, PartySpec
-from repro.core.strategies import ArrivalModel, StrategyRun
+from repro.core.policy import PolicyConfig
+from repro.core.strategies import ArrivalModel, RoundEngine
+
+JIT = PolicyConfig(strategy="jit")
 
 MODEL_MB = 264  # EfficientNet-B7 update
 ROUNDS = 10
@@ -60,8 +63,8 @@ def flat(n_parties: int, seed: int = 0):
     cluster = Cluster(sim, _cc(mb))
     job = FLJobSpec(job_id="flat", model_arch="x", model_bytes=mb,
                     rounds=ROUNDS, parties=_parties(n_parties, 0, WAN_BW))
-    run = StrategyRun(sim, cluster, job, AggregationEstimator(3 * mb / 10e9),
-                      "jit", arrival_model=ArrivalModel(job, 0.05, seed))
+    run = RoundEngine(sim, cluster, job, AggregationEstimator(3 * mb / 10e9),
+                      JIT, arrival_model=ArrivalModel(job, 0.05, seed))
     durations = []
     run.on_round_complete = lambda r, t: durations.append(t - run.round_start)
     run.start()
@@ -117,7 +120,7 @@ def hierarchical(n_parties: int, n_edges: int, seed: int = 0):
     }
     cloud_job = FLJobSpec(job_id="cloud", model_arch="x", model_bytes=mb,
                           rounds=ROUNDS, parties=cloud_parties)
-    cloud = StrategyRun(sim, cloud_cluster, cloud_job, est, "jit",
+    cloud = RoundEngine(sim, cloud_cluster, cloud_job, est, JIT,
                         external_arrivals=True)
 
     durations = []
@@ -130,8 +133,8 @@ def hierarchical(n_parties: int, n_edges: int, seed: int = 0):
     cloud.on_round_complete = on_cloud_round
 
     for e, j in enumerate(edge_jobs):
-        run = StrategyRun(
-            sim, edge_clusters[e], j, est, "jit",
+        run = RoundEngine(
+            sim, edge_clusters[e], j, est, JIT,
             arrival_model=ArrivalModel(j, 0.05, seed + e),
             gated_rounds=True,
             on_round_complete=lambda r, t, e=e: sim.schedule(

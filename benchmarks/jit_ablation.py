@@ -19,7 +19,8 @@ import sys
 
 from benchmarks.latency import batch_trigger_for
 from benchmarks.workloads import WORKLOADS, build_job
-from repro.core import run_strategy
+from repro.api import run_job
+from repro.core import PolicyConfig
 
 PARTY_COUNTS = [10, 100, 1000]
 MODES = ["active-hetero", "intermittent-hetero"]
@@ -33,11 +34,13 @@ def run(full: bool = False, rounds: int = 20):
         for n in counts:
             for policy in ["paper", "orderstat"]:
                 job = build_job(wl, n, mode, rounds=rounds)
-                m = run_strategy(
-                    job, "jit", t_pair_s=wl.t_pair_s,
+                m = run_job(
+                    job,
+                    PolicyConfig(strategy="jit", jit_policy=policy,
+                                 batch_trigger=batch_trigger_for(n)),
+                    t_pair_s=wl.t_pair_s,
                     cluster_config=wl.cluster_config(),
-                    batch_trigger=batch_trigger_for(n),
-                    noise_rel=0.05, jit_policy=policy,
+                    noise_rel=0.05,
                 )
                 rows.append((wl.name, mode, n, policy, m.mean_latency,
                              m.container_seconds / rounds))

@@ -9,7 +9,8 @@ from __future__ import annotations
 import sys
 
 from benchmarks.workloads import WORKLOADS, build_job
-from repro.core import run_strategy
+from repro.api import run_job
+from repro.core import PolicyConfig
 
 PARTY_COUNTS = [10, 100, 1000]
 STRATS = ["eager_ao", "eager_serverless", "batched", "jit"]
@@ -29,10 +30,12 @@ def run(full: bool = False, rounds: int = 20):
             for n in counts:
                 for s in STRATS:
                     job = build_job(wl, n, part, rounds=rounds)
-                    m = run_strategy(
-                        job, s, t_pair_s=wl.t_pair_s,
+                    m = run_job(
+                        job,
+                        PolicyConfig(strategy=s,
+                                     batch_trigger=batch_trigger_for(n)),
+                        t_pair_s=wl.t_pair_s,
                         cluster_config=wl.cluster_config(),
-                        batch_trigger=batch_trigger_for(n),
                         noise_rel=0.05,
                     )
                     rows.append((fig, wl.name, part, n, s,

@@ -19,11 +19,10 @@ import sys
 
 import numpy as np
 
-from repro.core.cluster import Cluster, ClusterConfig
+from repro.api import Platform
+from repro.core.cluster import ClusterConfig
 from repro.core.estimator import AggregationEstimator
-from repro.core.events import Simulator
 from repro.core.jobspec import FLJobSpec, PartySpec
-from repro.core.scheduler import JITScheduler
 
 
 def make_job(job_id: str, n_parties: int, epoch_s: float, model_mb: int,
@@ -43,11 +42,11 @@ def make_job(job_id: str, n_parties: int, epoch_s: float, model_mb: int,
 
 
 def simulate(policy: str, capacity: int, n_jobs: int, seed: int = 0):
-    sim = Simulator()
-    cluster = Cluster(sim, ClusterConfig(capacity=capacity, delta_s=1.0,
-                                         deploy_overhead_s=0.5,
-                                         state_load_s=0.2, checkpoint_s=0.2))
-    est = AggregationEstimator(t_pair_s=0.3)
+    platform = Platform(
+        ClusterConfig(capacity=capacity, delta_s=1.0, deploy_overhead_s=0.5,
+                      state_load_s=0.2, checkpoint_s=0.2),
+        AggregationEstimator(t_pair_s=0.3),
+    )
     rng = np.random.default_rng(seed)
 
     jobs = []
@@ -64,26 +63,15 @@ def simulate(policy: str, capacity: int, n_jobs: int, seed: int = 0):
                          2, seed + k)
         jobs.append(j)
 
-    sched = JITScheduler(sim, cluster, est, priority_policy=policy)
-    lateness = []
-    state = {j.job_id: j for j in jobs}
-
-    def on_aggregated(job_id, round_idx, t):
-        st = sched.jobs[job_id]
-        lateness.append(t - (st.round_start + st.t_rnd))
-        if st.done_rounds < state[job_id].rounds:
-            sim.schedule(1.0, lambda j=job_id: sched.start_round(j))
-
-    sched.on_aggregated = on_aggregated
     for j in jobs:
-        sched.upon_arrival(j)
-        sched.start_round(j.job_id)
-    sim.run()
+        platform.submit_scheduled(j, priority_policy=policy, round_gap_s=1.0)
+    metrics = platform.run()
 
-    lat = np.array(lateness)
+    lat = np.concatenate([metrics[j.job_id].round_lateness for j in jobs])
     total_rounds = sum(j.rounds for j in jobs)
     assert len(lat) == total_rounds, (len(lat), total_rounds)
-    makespan = sim.now
+    makespan = platform.sim.now
+    cluster = platform.cluster
     util = cluster.container_seconds / (capacity * makespan) if makespan else 0
     return {
         "policy": policy,

@@ -11,7 +11,8 @@ import sys
 
 from benchmarks.latency import batch_trigger_for
 from benchmarks.workloads import WORKLOADS, build_job
-from repro.core import run_strategy
+from repro.api import run_job
+from repro.core import PolicyConfig
 from repro.core.metrics import AZURE_PRICE_PER_CONTAINER_S, savings
 
 PARTY_COUNTS = [10, 100, 1000]
@@ -27,10 +28,11 @@ def run(full: bool = False, rounds: int = 50):
                 res = {}
                 for s in ["jit", "batched", "eager_serverless", "eager_ao"]:
                     job = build_job(wl, n, mode, rounds=rounds)
-                    res[s] = run_strategy(
-                        job, s, t_pair_s=wl.t_pair_s,
+                    policy = PolicyConfig(
+                        strategy=s, batch_trigger=batch_trigger_for(n))
+                    res[s] = run_job(
+                        job, policy, t_pair_s=wl.t_pair_s,
                         cluster_config=wl.cluster_config(),
-                        batch_trigger=batch_trigger_for(n),
                         noise_rel=0.05,
                     )
                 cs = {k: v.container_seconds for k, v in res.items()}

@@ -11,8 +11,8 @@ rounds (expect ~20-40 min on one core; use --rounds/--sequences to shrink).
 import argparse
 
 from repro import configs
+from repro.api import Platform
 from repro.core.jobspec import FLJobSpec, PartySpec
-from repro.fl.job import FLJobRuntime
 from repro.models import model as M
 
 configs.load_all()
@@ -45,19 +45,21 @@ def main():
         batch_size=args.batch_size,
         parties={f"p{i}": PartySpec(f"p{i}") for i in range(args.parties)},
     )
-    runtime = FLJobRuntime(
+    result = Platform().train(
         cfg, spec, n_sequences=args.sequences, heterogeneous=True,
-        eval_sequences=32, seed=0,
+        eval_sequences=32, seed=0, verbose=True,
     )
-    print(f"initial eval loss: {runtime.eval_loss():.4f}")
-    records = runtime.run(verbose=True)
+    records = result.records
     print("\nfinal eval loss:", records[-1].global_loss)
+    print(f"JIT container-seconds: {result.metrics.container_seconds:.1f} "
+          f"(${result.metrics.cost_usd:.4f})")
     pred_errs = [
         abs(r.t_rnd_pred - max(r.arrivals.values())) / max(r.arrivals.values())
         for r in records[1:]
     ]
-    print(f"mean t_rnd prediction error (rounds 2+): "
-          f"{100*sum(pred_errs)/len(pred_errs):.1f}%")
+    if pred_errs:  # needs >= 2 rounds (round 1 has no observations yet)
+        print(f"mean t_rnd prediction error (rounds 2+): "
+              f"{100*sum(pred_errs)/len(pred_errs):.1f}%")
 
 
 if __name__ == "__main__":

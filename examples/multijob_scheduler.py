@@ -1,17 +1,17 @@
-"""Multi-tenant JIT scheduling (§5.5): many concurrent FL jobs share one
-Kubernetes-like cluster. Demonstrates priorities (= deadline t_rnd - t_agg),
-the deadline timer, opportunistic early aggregation on idle capacity, and
-preemption with partial-aggregate checkpointing.
+"""Multi-tenant JIT scheduling (§5.5) through the `Platform` facade: many
+concurrent FL jobs share one Kubernetes-like cluster. Demonstrates
+priorities (= deadline t_rnd - t_agg), the deadline timer, opportunistic
+early aggregation on idle capacity, and preemption with partial-aggregate
+checkpointing.
 
   PYTHONPATH=src python examples/multijob_scheduler.py
 """
 import numpy as np
 
-from repro.core.cluster import Cluster, ClusterConfig
+from repro.api import Platform
+from repro.core.cluster import ClusterConfig
 from repro.core.estimator import AggregationEstimator
-from repro.core.events import Simulator
 from repro.core.jobspec import FLJobSpec, PartySpec
-from repro.core.scheduler import JITScheduler
 
 
 def make_job(job_id: str, n_parties: int, epoch_s: float, model_mb: int,
@@ -31,10 +31,10 @@ def make_job(job_id: str, n_parties: int, epoch_s: float, model_mb: int,
 
 
 def main():
-    sim = Simulator()
     # a deliberately SMALL cluster so jobs contend (capacity 2)
-    cluster = Cluster(sim, ClusterConfig(capacity=2, delta_s=1.0))
-    est = AggregationEstimator(t_pair_s=0.3)
+    platform = Platform(ClusterConfig(capacity=2, delta_s=1.0),
+                        AggregationEstimator(t_pair_s=0.3))
+    cluster = platform.cluster
 
     jobs = [
         make_job("small-fast", n_parties=20, epoch_s=60, model_mb=50,
@@ -45,42 +45,35 @@ def main():
                  rounds=2, seed=3),
     ]
 
-    state = {j.job_id: j for j in jobs}
-    log = []
-
     def on_aggregated(job_id, round_idx, t):
-        log.append((t, job_id, round_idx))
         print(f"[t={t:8.1f}s] {job_id:12s} round {round_idx} aggregated "
               f"(cluster: {len(cluster.running)} running, "
               f"{len(cluster.pending)} pending, "
               f"{cluster.n_preemptions} preemptions so far)")
-        st = sched.jobs[job_id]
-        if st.done_rounds < state[job_id].rounds:
-            # next round starts when the fused model is redistributed
-            sim.schedule(1.0, lambda j=job_id: sched.start_round(j))
 
-    sched = JITScheduler(sim, cluster, est, on_aggregated=on_aggregated)
+    # rounds restart automatically 1s after each fused model (round_gap_s)
     for j in jobs:
-        st = sched.upon_arrival(j)
+        st = platform.submit_scheduled(j, on_aggregated=on_aggregated,
+                                       round_gap_s=1.0)
         print(f"job {j.job_id:12s}: {j.n_parties:4d} parties  "
               f"t_rnd={st.t_rnd:8.1f}s  t_agg={st.t_agg:6.1f}s  "
               f"priority(deadline)={st.t_rnd - st.t_agg:8.1f}s")
-        sched.start_round(j.job_id)
 
-    sim.run()
+    metrics = platform.run()
 
     print("\n--- summary ---")
-    total_rounds = sum(st.done_rounds for st in sched.jobs.values())
+    total_rounds = sum(m.rounds_done for m in metrics.values())
     print(f"rounds aggregated: {total_rounds}")
     print(f"deployments: {cluster.n_deploys}, "
           f"preemptions: {cluster.n_preemptions}")
     print(f"container-seconds by job: "
-          f"{ {k: round(v,1) for k, v in cluster.container_seconds_by_job.items()} }")
+          f"{ {k: round(m.container_seconds, 1) for k, m in metrics.items()} }")
+    sim_now = platform.sim.now
     print(f"total container-seconds: {cluster.container_seconds:.1f} "
-          f"over {sim.now:.1f}s of cluster time")
-    util = cluster.container_seconds / (2 * sim.now)
+          f"over {sim_now:.1f}s of cluster time")
+    util = cluster.container_seconds / (2 * sim_now)
     print(f"cluster utilisation: {100*util:.1f}% "
-          f"(vs 3 always-on aggregators = {100*3*sim.now/(2*sim.now):.0f}% "
+          f"(vs 3 always-on aggregators = {100*3*sim_now/(2*sim_now):.0f}% "
           f"of capacity demanded)")
 
 

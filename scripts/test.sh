@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Repo test entry point:
+#   scripts/test.sh              # full suite
+#   scripts/test.sh -m "not slow" -k strategies
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+# 8 virtual host devices so sharding/mesh paths exercise multi-device code
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+
+exec python -m pytest -q "$@"

@@ -1,0 +1,253 @@
+"""`repro.api` — the one platform surface over the three execution vehicles.
+
+The reproduction previously exposed three divergent entry points:
+``run_strategy(...)`` with loose kwargs for single-job simulation,
+``JITScheduler`` wiring for multi-job contention, and ``FLJobRuntime`` for
+real-JAX federated training. ``Platform`` drives all three through one
+facade:
+
+    from repro.api import Platform
+    from repro.core import ClusterConfig, PolicyConfig
+
+    platform = Platform(ClusterConfig(), t_pair_s=0.08)
+
+    # 1. single- or many-job discrete-event simulation
+    platform.submit(job, PolicyConfig(strategy="jit", opportunistic=True))
+    metrics = platform.run()[job.job_id]          # -> JobMetrics
+
+    # 2. multi-job Fig. 6 scheduler contention (EDF priorities, preemption)
+    platform.submit_scheduled(job_a)
+    platform.submit_scheduled(job_b)
+    metrics = platform.run()                      # -> {job_id: JobMetrics}
+
+    # 3. real-JAX federated training (parties + Pallas fusion kernels)
+    result = platform.train(model_cfg, job)       # -> TrainingResult
+
+Policies are ``PolicyConfig`` values resolved against the pluggable
+strategy registry (``repro.core.policy``); a strategy registered with
+``@register_strategy`` is immediately runnable through this facade.
+
+``run_job`` is the one-shot convenience (fresh simulator + cluster per
+call); ``repro.core.run_strategy`` remains as a thin shim over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Union
+
+from repro.core.cluster import Cluster, ClusterConfig
+from repro.core.estimator import AggregationEstimator
+from repro.core.events import Simulator
+from repro.core.jobspec import FLJobSpec
+from repro.core.metrics import JobMetrics
+from repro.core.policy import PolicyConfig, as_policy
+from repro.core.scheduler import JITScheduler, JobState
+from repro.core.strategies import ArrivalModel, RoundEngine
+
+__all__ = ["Platform", "TrainingResult", "run_job"]
+
+
+@dataclasses.dataclass
+class TrainingResult:
+    """Outcome of the real-training vehicle (``Platform.train``)."""
+
+    metrics: JobMetrics
+    records: List[Any]  # List[repro.fl.job.RoundRecord]
+    runtime: Any  # repro.fl.job.FLJobRuntime (final params, eval_loss, ...)
+
+
+class Platform:
+    """One shared simulated cluster + estimator, three execution vehicles."""
+
+    def __init__(
+        self,
+        cluster_config: Optional[ClusterConfig] = None,
+        estimator: Optional[AggregationEstimator] = None,
+        *,
+        t_pair_s: float = 0.05,
+    ):
+        self.sim = Simulator()
+        self.cluster_config = cluster_config or ClusterConfig()
+        self.cluster = Cluster(self.sim, self.cluster_config)
+        self.estimator = estimator or AggregationEstimator(t_pair_s)
+        self.engines: Dict[str, RoundEngine] = {}
+        self._scheduler: Optional[JITScheduler] = None
+        self._ran = False
+
+    # ---- vehicle 1: per-job simulation engines -----------------------------
+    def submit(
+        self,
+        job: FLJobSpec,
+        policy: Union[PolicyConfig, str, None] = None,
+        *,
+        seed: int = 0,
+        noise_rel: float = 0.02,
+        dropout_prob: float = 0.0,
+        arrival_model: Optional[ArrivalModel] = None,
+        on_round_complete=None,
+        external_arrivals: bool = False,
+        gated_rounds: bool = False,
+    ) -> RoundEngine:
+        """Queue `job` for simulation under `policy`; returns its engine.
+
+        Many jobs may be submitted before ``run()``; they share the
+        platform's cluster and contend for its capacity.
+        """
+        policy = as_policy(policy)
+        self._check_new(job.job_id)
+        engine = RoundEngine(
+            self.sim, self.cluster, job, self.estimator, policy,
+            arrival_model=arrival_model or ArrivalModel(
+                job, noise_rel=noise_rel, seed=seed,
+                dropout_prob=dropout_prob,
+            ),
+            on_round_complete=on_round_complete,
+            external_arrivals=external_arrivals,
+            gated_rounds=gated_rounds,
+        )
+        self.engines[job.job_id] = engine
+        return engine
+
+    # ---- vehicle 2: multi-job Fig. 6 scheduler -----------------------------
+    def scheduler(
+        self,
+        *,
+        priority_policy: Optional[str] = None,
+        round_gap_s: Optional[float] = None,
+        on_aggregated=None,
+    ) -> JITScheduler:
+        """The platform's (lazily created) multi-job JIT scheduler.
+
+        Scheduler settings are platform-wide: the first call fixes them
+        (defaults: "deadline" priorities, 1s round gap); a later call
+        passing a conflicting value raises instead of silently ignoring it.
+        """
+        if self._scheduler is None:
+            self._scheduler = JITScheduler(
+                self.sim, self.cluster, self.estimator,
+                on_aggregated=on_aggregated,
+                priority_policy=priority_policy or "deadline",
+                auto_restart=True,
+                round_gap_s=1.0 if round_gap_s is None else round_gap_s,
+            )
+            return self._scheduler
+        sched = self._scheduler
+        for name, want, have in [
+            ("priority_policy", priority_policy, sched.priority_policy),
+            ("round_gap_s", round_gap_s, sched.round_gap_s),
+            ("on_aggregated", on_aggregated, sched.on_aggregated),
+        ]:
+            if want is not None and want != have:
+                raise ValueError(
+                    f"scheduler already created with {name}={have!r}; "
+                    f"cannot change it to {want!r} (one scheduler per "
+                    f"Platform)")
+        return sched
+
+    def submit_scheduled(self, job: FLJobSpec, **scheduler_kw) -> JobState:
+        """Queue `job` on the shared Fig. 6 JIT scheduler (§5.5 contention:
+        EDF priorities, deadline timers, preemption). Rounds restart
+        automatically until ``job.rounds`` complete."""
+        self._check_new(job.job_id)
+        return self.scheduler(**scheduler_kw).upon_arrival(job)
+
+    # ---- run ---------------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> Dict[str, JobMetrics]:
+        """Start everything submitted, run the clock, return metrics by job."""
+        if self._ran:
+            raise RuntimeError(
+                "Platform.run() already called; build a new Platform "
+                "(simulated clusters are single-shot)")
+        self._ran = True
+        for engine in self.engines.values():
+            engine.start()
+        if self._scheduler is not None:
+            for job_id in self._scheduler.jobs:
+                self._scheduler.start_round(job_id)
+        self.sim.run(until)
+        return self.metrics()
+
+    def metrics(self) -> Dict[str, JobMetrics]:
+        out: Dict[str, JobMetrics] = {}
+        price = self.cluster_config.price_per_container_s
+        for job_id, engine in self.engines.items():
+            m = engine.metrics
+            m.n_deploys = self.cluster.n_deploys_by_job.get(job_id, 0)
+            m.cost_usd = m.container_seconds * price
+            out[job_id] = m
+        if self._scheduler is not None:
+            for job_id, st in self._scheduler.jobs.items():
+                out[job_id] = self._scheduler_metrics(job_id, st, price)
+        return out
+
+    def _scheduler_metrics(self, job_id: str, st: JobState,
+                           price: float) -> JobMetrics:
+        m = JobMetrics(job_id, "jit-scheduled")
+        m.rounds_done = st.done_rounds
+        # SLA lateness (completion − predicted round end) per round; kept
+        # separate from round_latencies, whose §6.2 semantics (completion −
+        # last arrival) the scheduler vehicle does not observe
+        m.round_lateness = list(st.lateness)
+        m.container_seconds = self.cluster.container_seconds_by_job.get(
+            job_id, 0.0)
+        m.cost_usd = m.container_seconds * price
+        m.n_deploys = self.cluster.n_deploys_by_job.get(job_id, 0)
+        m.finished_at = st.finished_at  # this job's last aggregation
+        return m
+
+    # ---- vehicle 3: real-JAX federated training ----------------------------
+    def train(
+        self,
+        model_cfg,
+        job: FLJobSpec,
+        *,
+        rounds: Optional[int] = None,
+        verbose: bool = False,
+        **runtime_kw,
+    ) -> TrainingResult:
+        """Run real federated training (JAX parties + Pallas fusion kernels
+        + the JIT scheduling timeline) for `job` on `model_cfg`.
+
+        `runtime_kw` is forwarded to ``repro.fl.job.FLJobRuntime``
+        (n_sequences, heterogeneous, seed, epochs_per_round, interpret, ...).
+        The platform's cluster config prices the virtual JIT timeline; the
+        estimator is measured from the real fusion kernel unless one is
+        passed explicitly via ``runtime_kw["estimator"]``.
+        """
+        from repro.fl.job import FLJobRuntime  # deferred: imports jax
+
+        runtime_kw.setdefault("cluster_config", self.cluster_config)
+        runtime = FLJobRuntime(model_cfg, job, **runtime_kw)
+        records = runtime.run(rounds=rounds, verbose=verbose)
+        return TrainingResult(
+            metrics=runtime.metrics(), records=records, runtime=runtime,
+        )
+
+    # ---- internals ---------------------------------------------------------
+    def _check_new(self, job_id: str) -> None:
+        if self._ran:
+            raise RuntimeError(
+                "Platform.run() already called; build a new Platform "
+                "(simulated clusters are single-shot)")
+        if job_id in self.engines or (
+            self._scheduler is not None and job_id in self._scheduler.jobs
+        ):
+            raise ValueError(f"job {job_id!r} already submitted")
+
+
+def run_job(
+    job: FLJobSpec,
+    policy: Union[PolicyConfig, str, None] = None,
+    *,
+    cluster_config: Optional[ClusterConfig] = None,
+    estimator: Optional[AggregationEstimator] = None,
+    t_pair_s: float = 0.05,
+    seed: int = 0,
+    noise_rel: float = 0.02,
+    dropout_prob: float = 0.0,
+) -> JobMetrics:
+    """One-shot: simulate `job` under `policy` on a fresh platform."""
+    platform = Platform(cluster_config, estimator, t_pair_s=t_pair_s)
+    platform.submit(job, policy, seed=seed, noise_rel=noise_rel,
+                    dropout_prob=dropout_prob)
+    return platform.run()[job.job_id]

@@ -4,7 +4,8 @@
   prediction  — periodicity/linearity update-arrival prediction (§4, §5.3)
   estimator   — t_pair measurement + t_agg estimation (§5.4)
   scheduler   — Fig. 6 JIT scheduler: timers + priorities + preemption (§5.5)
-  strategies  — eager-AO / eager-serverless / batched / lazy / JIT (§3)
+  policy      — PolicyConfig + AggregationStrategy protocol + registry
+  strategies  — RoundEngine + eager-AO / eager-λ / batched / lazy / JIT (§3)
   events      — discrete-event simulation core
   cluster     — simulated k8s cluster with overheads + preemption
   queue       — durable message queue (Kafka/object-store stand-in)
@@ -25,11 +26,19 @@ from repro.core.prediction import (  # noqa: F401
     PeriodicTracker,
     UpdatePredictor,
 )
+from repro.core.policy import (  # noqa: F401
+    AggregationStrategy,
+    PolicyConfig,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
 from repro.core.queue import MessageQueue  # noqa: F401
 from repro.core.scheduler import JITScheduler  # noqa: F401
 from repro.core.strategies import (  # noqa: F401
     STRATEGIES,
     ArrivalModel,
+    RoundEngine,
     StrategyRun,
     run_strategy,
 )

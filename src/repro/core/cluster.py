@@ -58,6 +58,7 @@ class Cluster:
         self.container_seconds: float = 0.0
         self.container_seconds_by_job: Dict[str, float] = {}
         self.n_deploys: int = 0
+        self.n_deploys_by_job: Dict[str, int] = {}
         self.n_preemptions: int = 0
         self.busy_until: float = 0.0
         self._tick_scheduled = False
@@ -83,6 +84,13 @@ class Cluster:
 
     def idle_capacity(self) -> int:
         return self.cfg.capacity - len(self.running)
+
+    def record_deploy(self, job_id: str) -> None:
+        """Count one container deployment (cluster-wide and per job)."""
+        self.n_deploys += 1
+        self.n_deploys_by_job[job_id] = (
+            self.n_deploys_by_job.get(job_id, 0) + 1
+        )
 
     # ---- scheduling tick (every delta seconds while work exists) -----------
     def _ensure_tick(self) -> None:
@@ -118,7 +126,7 @@ class Cluster:
         cid = next(self._cids)
         task.container_id = cid
         task.started_at = self.sim.now
-        self.n_deploys += 1
+        self.record_deploy(task.job_id)
         startup = self.cfg.deploy_overhead_s + self.cfg.state_load_s
         task._work_started = self.sim.now + startup
         self.running[task.task_id] = task

@@ -27,6 +27,9 @@ class JobMetrics:
     predictions: List[Tuple[float, float]] = dataclasses.field(
         default_factory=list
     )  # (t_rnd, t_agg) per round, JIT only
+    round_lateness: List[float] = dataclasses.field(
+        default_factory=list
+    )  # completion − predicted round end, scheduler vehicle only (§5.5)
 
     @property
     def mean_latency(self) -> float:

@@ -36,10 +36,19 @@ class JobState:
     timer: Optional[EventHandle] = None
     executing: bool = False
     done_rounds: int = 0
+    # SLA lateness per round: completion − (round_start + t_rnd)
+    lateness: List[float] = dataclasses.field(default_factory=list)
+    finished_at: Optional[float] = None  # this job's last aggregation time
 
 
 class JITScheduler:
-    """Schedules aggregation for many concurrent FL jobs on one cluster."""
+    """Schedules aggregation for many concurrent FL jobs on one cluster.
+
+    With ``auto_restart`` (the ``repro.api.Platform`` default) the next
+    round of each job starts ``round_gap_s`` after the previous fused model
+    is redistributed, until ``job.rounds`` rounds complete; otherwise the
+    caller drives ``start_round`` (e.g. from ``on_aggregated``).
+    """
 
     def __init__(
         self,
@@ -49,6 +58,8 @@ class JITScheduler:
         queue: Optional[MessageQueue] = None,
         on_aggregated: Optional[Callable[[str, int, float], None]] = None,
         priority_policy: str = "deadline",  # "deadline" (§5.5) | "fifo"
+        auto_restart: bool = False,
+        round_gap_s: float = 1.0,
     ):
         assert priority_policy in ("deadline", "fifo"), priority_policy
         self.sim = sim
@@ -58,6 +69,8 @@ class JITScheduler:
         self.jobs: Dict[str, JobState] = {}
         self.on_aggregated = on_aggregated  # (job_id, round, completion_t)
         self.priority_policy = priority_policy
+        self.auto_restart = auto_restart
+        self.round_gap_s = round_gap_s
 
     # ---- Fig. 6 line 1: upon ARRIVAL -----------------------------------------
     def upon_arrival(self, job: FLJobSpec) -> JobState:
@@ -118,10 +131,15 @@ class JITScheduler:
             st.timer.cancel()
         observed = t - st.round_start - max(0.0, st.t_rnd - st.t_agg)
         self.est.calibrate(max(observed, 1e-6), st.job, st.job.quorum)
+        st.lateness.append(t - (st.round_start + st.t_rnd))
+        st.finished_at = t
         st.done_rounds += 1
         st.round_idx += 1
         if self.on_aggregated:
             self.on_aggregated(job_id, st.round_idx - 1, t)
+        if self.auto_restart and st.done_rounds < st.job.rounds:
+            self.sim.schedule(self.round_gap_s,
+                              lambda j=job_id: self.start_round(j))
 
     # ---- feedback from parties ---------------------------------------------------
     def observe_update(self, job_id: str, party_id: str,

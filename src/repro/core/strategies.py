@@ -7,6 +7,15 @@ driven over the discrete-event simulator.
   lazy              — deploy once, after the last update arrives
   jit               — deploy at predicted (t_rnd - t_agg); timer + priority
 
+Architecture: a shared ``RoundEngine`` owns everything strategy-independent
+— party-arrival scheduling, round windows and quorum (§4.3/§5.1), metrics,
+and the two execution vehicles (serverless task submission and the
+streaming container). Each strategy is an ``AggregationStrategy`` plugin
+(see ``repro.core.policy``) that receives engine callbacks and decides only
+*when* to deploy; it is selected by name through the strategy registry, so
+a new policy is a ``@register_strategy`` subclass, not an engine edit.
+``STRATEGIES`` is derived from the registry.
+
 Each strategy processes updates of one FL job over R synchronisation rounds;
 parties are emulated with the paper's §6.3 arrival models. Metrics follow
 §6.2: aggregation latency (completion - last update arrival) and container
@@ -31,7 +40,9 @@ Beyond-paper refinements (``jit_policy="orderstat"``, the default):
   1. Order-statistic t_rnd for intermittent parties: the paper predicts
      t_rnd = t_wait (Fig. 6 line 7), an upper bound — the actual last
      update of N parties sending at uniformly random times lands at
-     E[max] = t_comm + (t_wait − t_comm)·N/(N+1).
+     E[max] = t_comm + (t_wait − t_comm)·N/(N+1). ``margin_sigmas`` adds a
+     safety margin of that many standard deviations of the max order
+     statistic (capped at the window boundary) for noise-robust deploys.
   2. Backlog-fill trigger: instead of the paper's fixed timer at
      t_rnd − t_agg(N) (which counts fuse work for all N updates even
      though only the queued backlog is actually waiting), deploy when
@@ -49,7 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set, Union
 
 import numpy as np
 
@@ -58,9 +69,15 @@ from repro.core.estimator import AggregationEstimator, usable_cores
 from repro.core.events import Simulator
 from repro.core.jobspec import FLJobSpec
 from repro.core.metrics import JobMetrics
+from repro.core.policy import (
+    AggregationStrategy,
+    PolicyConfig,
+    as_policy,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+)
 from repro.core.prediction import UpdatePredictor
-
-STRATEGIES = ("eager_ao", "eager_serverless", "batched", "lazy", "jit")
 
 
 # --------------------------------------------------------------------------
@@ -124,10 +141,17 @@ class ArrivalModel:
 
 
 # --------------------------------------------------------------------------
-# round engine
+# round engine: the strategy-independent mechanics
 # --------------------------------------------------------------------------
-class StrategyRun:
-    """Runs one job under one strategy; collects JobMetrics."""
+class RoundEngine:
+    """Runs one job under one deployment strategy; collects JobMetrics.
+
+    The engine owns arrival scheduling, the t_wait round window + quorum
+    accounting, the serverless-task and streaming-container execution
+    vehicles, and round/job completion. The *when to deploy* decisions are
+    delegated to the ``AggregationStrategy`` resolved from
+    ``policy.strategy`` (see ``repro.core.policy``).
+    """
 
     def __init__(
         self,
@@ -135,43 +159,29 @@ class StrategyRun:
         cluster: Cluster,
         job: FLJobSpec,
         estimator: AggregationEstimator,
-        strategy: str,
+        policy: Union[PolicyConfig, str],
         *,
-        batch_trigger: int = 10,
         arrival_model: Optional[ArrivalModel] = None,
-        opportunistic: bool = False,
         on_job_done: Optional[Callable[[], None]] = None,
         on_round_complete: Optional[Callable[[int, float], None]] = None,
         external_arrivals: bool = False,  # updates injected via inject_update
         gated_rounds: bool = False,  # next round waits for release_round()
-        jit_policy: str = "orderstat",  # "orderstat" | "paper"
-        margin_sigmas: float = 2.0,
-        keepalive_factor: float = 1.0,
-        amort_factor: float = 4.0,
-        eager_max_per_invocation: int = 32,
     ):
-        assert strategy in STRATEGIES, strategy
-        assert jit_policy in ("orderstat", "paper"), jit_policy
+        policy = as_policy(policy)
         job.validate()
         self.sim, self.cluster, self.job = sim, cluster, job
         self.est = estimator
-        self.strategy = strategy
-        self.batch_trigger = batch_trigger
+        self.policy = policy
+        self.strategy = policy.strategy  # name, for metrics / back-compat
         self.arrivals = arrival_model or ArrivalModel(job)
-        self.opportunistic = opportunistic
         self.on_job_done = on_job_done
         self.on_round_complete = on_round_complete
         self.external_arrivals = external_arrivals
         self.gated_rounds = gated_rounds
         self._release_pending = False
         self._round_waiting = None  # continuation when gated
-        self.jit_policy = jit_policy
-        self.margin_sigmas = margin_sigmas
-        self.keepalive_factor = keepalive_factor
-        self.amort_factor = amort_factor
-        self.eager_cap = max(1, eager_max_per_invocation)
         self.predictor = UpdatePredictor(job)
-        self.metrics = JobMetrics(job.job_id, strategy)
+        self.metrics = JobMetrics(job.job_id, policy.strategy)
         # per-update fuse work on one deployment (paper: t_pair scaled by
         # usable cores x aggregator count)
         res = estimator.resources
@@ -182,15 +192,16 @@ class StrategyRun:
         cc = self.cluster.cfg
         self.oh_startup = cc.deploy_overhead_s + cc.state_load_s
         self.oh_cycle = self.oh_startup + cc.checkpoint_s  # redeploy cost
+        # the pluggable deployment policy (raises on unknown names)
+        self.impl: AggregationStrategy = get_strategy(policy.strategy)(
+            self, policy)
         # state
         self.round = 0
-        self.ao: Optional[AlwaysOnContainer] = None
         self._reset_round_state()
 
     # ---- lifecycle -----------------------------------------------------------
     def start(self) -> None:
-        if self.strategy == "eager_ao":
-            self.ao = AlwaysOnContainer(self.cluster, self.job.job_id)
+        self.impl.on_job_start()
         self._start_round()
 
     def _reset_round_state(self):
@@ -202,14 +213,13 @@ class StrategyRun:
         self.last_arrival: Optional[float] = None
         self.round_start = self.sim.now
         self.inflight = 0  # updates handed to a running task
-        # streaming container (JIT)
+        # streaming container (engine-owned execution vehicle)
         self.stream_deployed = False
         self.stream_busy_until: Optional[float] = None
         self.stream_start_t: Optional[float] = None
-        self.jit_armed = False  # past the deadline / all-arrived trigger
-        self._jit_timer = None
         self._close_timer = None
         self.round_target = self.job.n_parties  # reduced at window close
+        self.impl.on_round_reset()
 
     def _start_round(self) -> None:
         self._reset_round_state()
@@ -228,43 +238,106 @@ class StrategyRun:
         if self.job.t_wait_s:
             self._close_timer = self.sim.schedule(
                 float(self.job.t_wait_s), self._close_round_window)
-        # JIT: plan the deployment from predictions (Fig. 6)
-        if self.strategy == "jit":
-            self._jit_t_rnd_exp = self._jit_expected_t_rnd()
-            t_rnd_sla = self.predictor.t_rnd()  # Fig. 6 lines 6-11
-            t_agg = self.est.t_agg(self.job)  # Fig. 6 line 13
-            trigger = max(0.0, t_rnd_sla - t_agg - self.oh_startup)
-            self.metrics.predictions.append((t_rnd_sla, t_agg))
-            self._jit_priority = self.round_start + trigger  # §5.5 priority
-            self._jit_timer = self.sim.schedule(trigger, self._jit_timer_fire)
+        self.impl.on_round_start()
 
-    # ---- JIT prediction of the round end -------------------------------------
-    def _jit_expected_t_rnd(self) -> float:
-        """Expected last-arrival offset under the active policy."""
-        if self.jit_policy == "paper" or not self.job.has_intermittent():
-            # Fig. 6 lines 6-11 (for intermittent parties t_train = t_wait).
-            return self.predictor.t_rnd()
-        # order-statistic estimate for the intermittent max (see docstring)
-        ints = [p for p in self.job.parties.values() if p.mode == "intermittent"]
-        acts = [
-            self.predictor.t_upd(p.party_id)
-            for p in self.job.parties.values()
-            if p.mode != "intermittent"
-        ]
-        k = len(ints)
-        m = self.job.model_bytes
-        comm = max(m / p.bw_down + m / p.bw_up for p in ints)
-        span = max(float(self.job.t_wait_s) - comm, 0.0)
-        mean_max = comm + span * k / (k + 1)
-        return max(mean_max, max(acts) if acts else 0.0)
+    # ---- update arrival --------------------------------------------------------
+    def _on_update(self, pid: str, offset: float) -> None:
+        now = self.sim.now
+        self.arrived += 1
+        self.arrived_parties.add(pid)
+        self.last_arrival = now
+        self.pending.append(now)
+        self.metrics.updates_received += 1
+        # predictor feedback (JIT uses it; harmless for others)
+        train_t = self.arrivals.sample_train_time(pid, offset)
+        self.predictor.observe_round(pid, train_t)
+        self.impl.on_update()
 
-    def _jit_backlog_fill(self) -> bool:
-        """True when the queued fuse work fills the time left to t_rnd_exp:
-        deploying now finishes the drain just as the last update lands."""
-        left = self.round_start + self._jit_t_rnd_exp - self.sim.now
-        return left <= self.oh_startup + len(self.pending) * self.w_u
+    def all_arrived(self) -> bool:
+        return self.arrived >= self.round_target
 
-    def _expected_remaining_makespan(self):
+    def _close_round_window(self) -> None:
+        """t_wait reached: ignore missing parties (§4.3); aggregate what
+        arrived if quorum holds, else record a failed round (§5.1)."""
+        self._close_timer = None
+        missing = self.job.n_parties - self.arrived
+        if missing <= 0:
+            return
+        self.metrics.dropped_updates += missing
+        if self.arrived < self.job.quorum:
+            self.metrics.quorum_failures += 1
+            self.round_target = self.arrived  # close with what we have
+            if self.arrived == 0:
+                self._round_complete()
+                return
+        self.round_target = self.arrived
+        if self.processed >= self.round_target and self.inflight == 0:
+            self._round_complete()
+            return
+        # kick the strategy to drain the remainder now
+        self.impl.on_window_close()
+
+    # ---- execution vehicles (the engine-callback surface) ---------------------
+    def take_pending(self) -> int:
+        """Claim every queued update for processing; returns the count."""
+        k = len(self.pending)
+        if k:
+            self.pending.clear()
+            self.inflight += k
+        return k
+
+    def submit_batch(self, k: int) -> None:
+        """Run k pending updates as one serverless aggregation task."""
+        if k <= 0:
+            return
+        del self.pending[:k]
+        self.inflight += k
+        self.task_active = True
+        self.cluster.submit(
+            self.job.job_id,
+            priority=self.sim.now,  # FIFO among serverless tasks
+            work_s=k * self.w_u,
+            on_complete=lambda t, k=k: self.task_done(k, t),
+            preemptible=False,
+        )
+
+    def stream_deploy(self) -> None:
+        """Deploy the streaming container (no-op if live or work is done)."""
+        if self.stream_deployed or self.processed + self.inflight >= self.round_target:
+            return
+        self.stream_deployed = True
+        self.cluster.record_deploy(self.job.job_id)
+        self.metrics.jit_deploys += 1
+        self.stream_start_t = self.sim.now
+        self.stream_busy_until = self.sim.now + self.oh_startup
+        self.stream_feed()
+
+    def stream_feed(self) -> None:
+        """Feed every pending update into the live streaming container."""
+        k = self.take_pending()
+        if k == 0:
+            return
+        start = max(self.sim.now, self.stream_busy_until)
+        self.stream_busy_until = start + k * self.w_u
+        self.sim.schedule_at(
+            self.stream_busy_until, lambda k=k: self.task_done(k, self.sim.now)
+        )
+
+    def stream_release(self) -> float:
+        """Checkpoint partial aggregate + release the container; returns the
+        time at which the container is actually gone (after checkpoint)."""
+        end = self.sim.now + self.cluster.cfg.checkpoint_s
+        start = self.stream_start_t if self.stream_start_t is not None else end
+        dur = end - start
+        self.cluster.container_seconds += dur
+        self.cluster.container_seconds_by_job[self.job.job_id] = (
+            self.cluster.container_seconds_by_job.get(self.job.job_id, 0.0) + dur
+        )
+        self.stream_deployed = False
+        self.stream_start_t = None
+        return end
+
+    def expected_remaining_makespan(self):
         """(R, k): expected time until the round's last update arrives, and
         the number of updates still outstanding (keep-alive economics)."""
         now = self.sim.now
@@ -288,222 +361,25 @@ class StrategyRun:
             R = max(R, 0.02 * max_tupd)
         return R, k
 
-    # ---- update arrival --------------------------------------------------------
-    def _on_update(self, pid: str, offset: float) -> None:
-        now = self.sim.now
-        self.arrived += 1
-        self.arrived_parties.add(pid)
-        self.last_arrival = now
-        self.pending.append(now)
-        self.metrics.updates_received += 1
-        # predictor feedback (JIT uses it; harmless for others)
-        train_t = self.arrivals.sample_train_time(pid, offset)
-        self.predictor.observe_round(pid, train_t)
-
-        s = self.strategy
-        if s == "eager_ao":
-            self._ao_process()
-        elif s == "eager_serverless":
-            # §3: deploy an aggregator dynamically per arriving update; a
-            # busy aggregator serialises followers (bounded per invocation)
-            if not self.task_active:
-                self._submit_batch(min(len(self.pending), self.eager_cap))
-        elif s == "batched":
-            if len(self.pending) >= self.batch_trigger or self._all_arrived():
-                self._submit_batch(len(self.pending))
-        elif s == "lazy":
-            if self._all_arrived():
-                self._submit_batch(len(self.pending))
-        elif s == "jit":
-            self._jit_on_update()
-
-    def _all_arrived(self) -> bool:
-        return self.arrived >= self.round_target
-
-    def _close_round_window(self) -> None:
-        """t_wait reached: ignore missing parties (§4.3); aggregate what
-        arrived if quorum holds, else record a failed round (§5.1)."""
-        self._close_timer = None
-        missing = self.job.n_parties - self.arrived
-        if missing <= 0:
-            return
-        self.metrics.dropped_updates += missing
-        if self.arrived < self.job.quorum:
-            self.metrics.quorum_failures += 1
-            self.round_target = self.arrived  # close with what we have
-            if self.arrived == 0:
-                self._round_complete()
-                return
-        self.round_target = self.arrived
-        if self.processed >= self.round_target and self.inflight == 0:
-            self._round_complete()
-            return
-        # kick the strategy to drain the remainder now
-        s = self.strategy
-        if s == "eager_ao":
-            self._ao_process()
-        elif s in ("eager_serverless", "batched", "lazy"):
-            if not self.task_active and self.pending:
-                self._submit_batch(len(self.pending))
-        elif s == "jit":
-            if self.stream_deployed:
-                self._stream_feed()
-            else:
-                self._jit_arm()
-
-    # ---- eager always-on --------------------------------------------------------
-    def _ao_process(self):
-        k = len(self.pending)
-        if not k:
-            return
-        self.pending.clear()
-        self.inflight += k
-        self.ao.process(k * self.w_u, lambda t, k=k: self._on_processed(k, t))
-
-    # ---- serverless task submission (eager / batched / lazy) ---------------------
-    def _submit_batch(self, k: int):
-        if k <= 0:
-            return
-        del self.pending[:k]
-        self.inflight += k
-        self.task_active = True
-        self.cluster.submit(
-            self.job.job_id,
-            priority=self.sim.now,  # FIFO among serverless tasks
-            work_s=k * self.w_u,
-            on_complete=lambda t, k=k: self._on_processed(k, t),
-            preemptible=False,
-        )
-
-    # ---- JIT (§5.5) ---------------------------------------------------------------
-    def _jit_on_update(self):
-        if self.stream_deployed:
-            self._stream_feed()
-            return
-        if self._all_arrived():
-            # nothing left to wait for: trigger now
-            self._jit_arm()
-            return
-        if self.jit_armed:
-            # tail update after the deadline drain released the container
-            self._stream_deploy()
-            return
-        if self.jit_policy == "orderstat" and self._jit_backlog_fill():
-            self._jit_arm()
-            return
-        if self.opportunistic and self.cluster.idle_capacity() > 0:
-            # greedy early drain when pending work amortises a deployment
-            if len(self.pending) * self.w_u >= self.amort_factor * self.oh_cycle:
-                self.metrics.jit_early_drains += 1
-                self._stream_deploy()
-
-    def _jit_timer_fire(self):
-        """Deadline reached (Fig. 6 line 19-21), work-conserving per §5.5."""
-        if self.jit_armed or self.stream_deployed:
-            return
-        if self.pending:
-            self._jit_arm()
-        else:
-            # no pending updates: defer, retaining the priority (§5.5)
-            self._jit_timer = self.sim.schedule(
-                self.cluster.cfg.delta_s, self._jit_timer_fire
-            )
-
-    def _jit_arm(self):
-        """Point of no return: from here updates are handled eagerly."""
-        self.jit_armed = True
-        if self._jit_timer is not None:
-            self._jit_timer.cancel()
-            self._jit_timer = None
-        if not self.stream_deployed:
-            self._stream_deploy()
-
-    # ---- streaming container (JIT execution vehicle) -------------------------------
-    def _stream_deploy(self):
-        if self.stream_deployed or self.processed + self.inflight >= self.round_target:
-            return
-        self.stream_deployed = True
-        self.cluster.n_deploys += 1
-        self.metrics.jit_deploys += 1
-        self.stream_start_t = self.sim.now
-        self.stream_busy_until = self.sim.now + self.oh_startup
-        self._stream_feed()
-
-    def _stream_feed(self):
-        k = len(self.pending)
-        if k == 0:
-            return
-        self.pending.clear()
-        self.inflight += k
-        start = max(self.sim.now, self.stream_busy_until)
-        self.stream_busy_until = start + k * self.w_u
-        self.sim.schedule_at(
-            self.stream_busy_until, lambda k=k: self._on_processed(k, self.sim.now)
-        )
-
-    def _stream_release(self) -> float:
-        """Checkpoint partial aggregate + release the container; returns the
-        time at which the container is actually gone (after checkpoint)."""
-        end = self.sim.now + self.cluster.cfg.checkpoint_s
-        start = self.stream_start_t if self.stream_start_t is not None else end
-        dur = end - start
-        self.cluster.container_seconds += dur
-        self.cluster.container_seconds_by_job[self.job.job_id] = (
-            self.cluster.container_seconds_by_job.get(self.job.job_id, 0.0) + dur
-        )
-        self.stream_deployed = False
-        self.stream_start_t = None
-        return end
-
-    def _jit_on_dry(self):
-        """Stream drained but more updates are expected: keep-alive policy.
-
-        Economics: staying hot until the round ends costs the expected
-        remaining makespan R in idle container-seconds; releasing costs up
-        to one checkpoint+redeploy cycle per remaining straggler. Stay hot
-        iff R <= keepalive_factor * k * oh_cycle."""
-        if self.inflight > 0:
-            return  # later feeds still running: the stream is not dry yet
-        R, k = self._expected_remaining_makespan()
-        if k > 0 and R <= self.keepalive_factor * k * self.oh_cycle:
-            return  # cheaper to idle hot than to checkpoint + redeploy
-        self._stream_release()
-
     # ---- completion --------------------------------------------------------------
-    def _on_processed(self, k: int, t: float):
+    def task_done(self, k: int, t: float):
+        """Completion callback for both execution vehicles."""
         self.processed += k
         self.inflight -= k
         self.task_active = False
         if self.processed >= self.round_target:
             self._round_complete()
             return
-        if self.stream_deployed:
-            if self.pending:
-                self._stream_feed()
-            else:
-                self._jit_on_dry()
-        elif self.strategy in ("eager_serverless", "batched") and self.pending:
-            cap = self.eager_cap if self.strategy == "eager_serverless" else len(
-                self.pending
-            )
-            self._submit_batch(min(len(self.pending), cap))
+        self.impl.on_task_done()
 
     def _round_complete(self):
-        if self.strategy == "eager_ao":
-            done = self.sim.now  # state stays in memory; no checkpoint
-        elif self.stream_deployed:
-            done = self._stream_release()
-        else:
-            done = self.sim.now  # task checkpoint time already inside Cluster
-
+        done = self.impl.finish_round()
         latency = done - (self.last_arrival or done)
         self.metrics.round_latencies.append(latency)
         self.metrics.rounds_done += 1
         completed = self.round
         self.round += 1
-        if self._jit_timer is not None:
-            self._jit_timer.cancel()
-            self._jit_timer = None
+        self.impl.on_round_end()
         if self._close_timer is not None:
             self._close_timer.cancel()
             self._close_timer = None
@@ -543,9 +419,7 @@ class StrategyRun:
             self._release_pending = True
 
     def _job_done(self):
-        if self.ao is not None:
-            self.ao.shutdown()
-            self.ao = None
+        self.impl.on_job_end()
         self.metrics.finished_at = self.sim.now
         self.metrics.container_seconds = self.cluster.container_seconds_by_job.get(
             self.job.job_id, 0.0
@@ -555,8 +429,286 @@ class StrategyRun:
 
 
 # --------------------------------------------------------------------------
-# convenience: run one job end-to-end under a strategy
+# the built-in deployment strategies (§3) as registry plugins
 # --------------------------------------------------------------------------
+@register_strategy("eager_ao")
+class EagerAO(AggregationStrategy):
+    """Always-on aggregator: billed from job start to job end (§3)."""
+
+    def __init__(self, engine, policy):
+        super().__init__(engine, policy)
+        self.ao: Optional[AlwaysOnContainer] = None
+
+    def on_job_start(self):
+        self.ao = AlwaysOnContainer(self.engine.cluster, self.engine.job.job_id)
+
+    def on_update(self):
+        self._process()
+
+    def on_window_close(self):
+        self._process()
+
+    def finish_round(self) -> float:
+        return self.engine.sim.now  # state stays in memory; no checkpoint
+
+    def on_job_end(self):
+        if self.ao is not None:
+            self.ao.shutdown()
+            self.ao = None
+
+    def _process(self):
+        e = self.engine
+        k = e.take_pending()
+        if k:
+            self.ao.process(k * e.w_u, lambda t, k=k: e.task_done(k, t))
+
+
+class _ServerlessDrain(AggregationStrategy):
+    """Shared t_wait drain for the serverless-task strategies."""
+
+    def on_window_close(self):
+        e = self.engine
+        if not e.task_active and e.pending:
+            e.submit_batch(len(e.pending))
+
+
+@register_strategy("eager_serverless")
+class EagerServerless(_ServerlessDrain):
+    """Deploy an aggregator dynamically per arriving update (Eager-λ, §3);
+    a busy aggregator serialises followers (bounded per invocation)."""
+
+    def _cap(self) -> int:
+        return min(len(self.engine.pending),
+                   self.policy.eager_max_per_invocation)
+
+    def on_update(self):
+        if not self.engine.task_active:
+            self.engine.submit_batch(self._cap())
+
+    def on_task_done(self):
+        if self.engine.pending:
+            self.engine.submit_batch(self._cap())
+
+
+@register_strategy("batched")
+class Batched(_ServerlessDrain):
+    """Deploy per batch of ``batch_trigger`` updates (Batched-λ, §3)."""
+
+    def on_update(self):
+        e = self.engine
+        if len(e.pending) >= self.policy.batch_trigger or e.all_arrived():
+            e.submit_batch(len(e.pending))
+
+    def on_task_done(self):
+        e = self.engine
+        if e.pending:
+            e.submit_batch(len(e.pending))
+
+
+@register_strategy("lazy")
+class Lazy(_ServerlessDrain):
+    """Deploy once, after the last update arrives (§3)."""
+
+    def on_update(self):
+        e = self.engine
+        if e.all_arrived():
+            e.submit_batch(len(e.pending))
+
+
+@register_strategy("jit")
+class JIT(AggregationStrategy):
+    """Deploy at predicted t_rnd − t_agg: timer + priority + keep-alive
+    economics (§5.5), with the beyond-paper ``orderstat`` refinements."""
+
+    def on_round_reset(self):
+        self.armed = False  # past the deadline / all-arrived trigger
+        self._timer = None
+        self._t_rnd_exp = 0.0
+        self.priority = 0.0
+
+    def on_round_start(self):
+        """Plan the deployment from predictions (Fig. 6)."""
+        e = self.engine
+        self._t_rnd_exp = self._expected_t_rnd()
+        t_rnd_sla = e.predictor.t_rnd()  # Fig. 6 lines 6-11
+        t_agg = e.est.t_agg(e.job)  # Fig. 6 line 13
+        trigger = max(0.0, t_rnd_sla - t_agg - e.oh_startup)
+        e.metrics.predictions.append((t_rnd_sla, t_agg))
+        self.priority = e.round_start + trigger  # §5.5 priority
+        self._timer = e.sim.schedule(trigger, self._timer_fire)
+
+    # ---- prediction of the round end ------------------------------------
+    def _expected_t_rnd(self) -> float:
+        """Expected last-arrival offset under the active policy."""
+        e = self.engine
+        if self.policy.jit_policy == "paper" or not e.job.has_intermittent():
+            # Fig. 6 lines 6-11 (for intermittent parties t_train = t_wait).
+            return e.predictor.t_rnd()
+        # order-statistic estimate for the intermittent max (see module
+        # docstring), plus the margin_sigmas safety margin
+        ints = [p for p in e.job.parties.values() if p.mode == "intermittent"]
+        acts = [
+            e.predictor.t_upd(p.party_id)
+            for p in e.job.parties.values()
+            if p.mode != "intermittent"
+        ]
+        k = len(ints)
+        m = e.job.model_bytes
+        comm = max(m / p.bw_down + m / p.bw_up for p in ints)
+        span = max(float(e.job.t_wait_s) - comm, 0.0)
+        mean_max = comm + span * k / (k + 1)
+        if self.policy.margin_sigmas:
+            # std of the max of k uniforms on [comm, comm+span]; push the
+            # estimate later for noise robustness, never past the window
+            sigma = span * math.sqrt(k / ((k + 1) ** 2 * (k + 2)))
+            mean_max = min(mean_max + self.policy.margin_sigmas * sigma,
+                           comm + span)
+        return max(mean_max, max(acts) if acts else 0.0)
+
+    def _backlog_fill(self) -> bool:
+        """True when the queued fuse work fills the time left to t_rnd_exp:
+        deploying now finishes the drain just as the last update lands."""
+        e = self.engine
+        left = e.round_start + self._t_rnd_exp - e.sim.now
+        return left <= e.oh_startup + len(e.pending) * e.w_u
+
+    # ---- engine hooks ----------------------------------------------------
+    def on_update(self):
+        e = self.engine
+        if e.stream_deployed:
+            e.stream_feed()
+            return
+        if e.all_arrived():
+            # nothing left to wait for: trigger now
+            self._arm()
+            return
+        if self.armed:
+            # tail update after the deadline drain released the container
+            e.stream_deploy()
+            return
+        if self.policy.jit_policy == "orderstat" and self._backlog_fill():
+            self._arm()
+            return
+        if self.policy.opportunistic and e.cluster.idle_capacity() > 0:
+            # greedy early drain when pending work amortises a deployment
+            if len(e.pending) * e.w_u >= self.policy.amort_factor * e.oh_cycle:
+                e.metrics.jit_early_drains += 1
+                e.stream_deploy()
+
+    def on_window_close(self):
+        e = self.engine
+        if e.stream_deployed:
+            e.stream_feed()
+        else:
+            self._arm()
+
+    def on_task_done(self):
+        e = self.engine
+        if e.stream_deployed:
+            if e.pending:
+                e.stream_feed()
+            else:
+                self._on_dry()
+
+    def on_round_end(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+    # ---- internals -------------------------------------------------------
+    def _timer_fire(self):
+        """Deadline reached (Fig. 6 line 19-21), work-conserving per §5.5."""
+        e = self.engine
+        if self.armed or e.stream_deployed:
+            return
+        if e.pending:
+            self._arm()
+        else:
+            # no pending updates: defer, retaining the priority (§5.5)
+            self._timer = e.sim.schedule(
+                e.cluster.cfg.delta_s, self._timer_fire
+            )
+
+    def _arm(self):
+        """Point of no return: from here updates are handled eagerly."""
+        self.armed = True
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        if not self.engine.stream_deployed:
+            self.engine.stream_deploy()
+
+    def _on_dry(self):
+        """Stream drained but more updates are expected: keep-alive policy.
+
+        Economics: staying hot until the round ends costs the expected
+        remaining makespan R in idle container-seconds; releasing costs up
+        to one checkpoint+redeploy cycle per remaining straggler. Stay hot
+        iff R <= keepalive_factor * k * oh_cycle."""
+        e = self.engine
+        if e.inflight > 0:
+            return  # later feeds still running: the stream is not dry yet
+        R, k = e.expected_remaining_makespan()
+        if k > 0 and R <= self.policy.keepalive_factor * k * e.oh_cycle:
+            return  # cheaper to idle hot than to checkpoint + redeploy
+        e.stream_release()
+
+
+# Derived from the registry (built-ins register above, in §3 order). This
+# is an import-time snapshot of the built-ins: strategies registered later
+# (plugins) are resolvable by name everywhere but only appear in
+# available_strategies(), which reads the live registry.
+STRATEGIES = available_strategies()
+
+
+# --------------------------------------------------------------------------
+# backward-compatible shims over the pre-registry API
+# --------------------------------------------------------------------------
+def StrategyRun(
+    sim: Simulator,
+    cluster: Cluster,
+    job: FLJobSpec,
+    estimator: AggregationEstimator,
+    strategy: str,
+    *,
+    batch_trigger: int = 10,
+    arrival_model: Optional[ArrivalModel] = None,
+    opportunistic: bool = False,
+    on_job_done: Optional[Callable[[], None]] = None,
+    on_round_complete: Optional[Callable[[int, float], None]] = None,
+    external_arrivals: bool = False,
+    gated_rounds: bool = False,
+    jit_policy: str = "orderstat",
+    margin_sigmas: float = 0.0,
+    keepalive_factor: float = 1.0,
+    amort_factor: float = 4.0,
+    eager_max_per_invocation: int = 32,
+) -> RoundEngine:
+    """Deprecated: constructor-compatible shim over ``RoundEngine``.
+
+    Prefer ``RoundEngine(sim, cluster, job, estimator, PolicyConfig(...))``
+    or the ``repro.api.Platform`` facade.
+    """
+    policy = PolicyConfig(
+        strategy=strategy,
+        batch_trigger=batch_trigger,
+        jit_policy=jit_policy,
+        margin_sigmas=margin_sigmas,
+        keepalive_factor=keepalive_factor,
+        amort_factor=amort_factor,
+        eager_max_per_invocation=eager_max_per_invocation,
+        opportunistic=opportunistic,
+    )
+    return RoundEngine(
+        sim, cluster, job, estimator, policy,
+        arrival_model=arrival_model,
+        on_job_done=on_job_done,
+        on_round_complete=on_round_complete,
+        external_arrivals=external_arrivals,
+        gated_rounds=gated_rounds,
+    )
+
+
 def run_strategy(
     job: FLJobSpec,
     strategy: str,
@@ -570,29 +722,36 @@ def run_strategy(
     dropout_prob: float = 0.0,
     opportunistic: bool = False,
     jit_policy: str = "orderstat",
-    margin_sigmas: float = 2.0,
+    margin_sigmas: float = 0.0,
     keepalive_factor: float = 1.0,
     amort_factor: float = 4.0,
     eager_max_per_invocation: int = 32,
 ) -> JobMetrics:
-    sim = Simulator()
-    cluster = Cluster(sim, cluster_config or ClusterConfig())
-    est = estimator or AggregationEstimator(t_pair_s)
-    run = StrategyRun(
-        sim, cluster, job, est, strategy,
+    """Run one job end-to-end under a strategy (pre-``Platform`` shim).
+
+    Thin wrapper over ``repro.api.run_job``; kept for backward
+    compatibility. Note: ``margin_sigmas`` now actually feeds the orderstat
+    t_rnd safety margin; its default is 0 (the former default of 2.0 was
+    stored but never read, i.e. behaved as 0).
+    """
+    from repro.api import run_job
+
+    policy = PolicyConfig(
+        strategy=strategy,
         batch_trigger=batch_trigger,
-        arrival_model=ArrivalModel(job, noise_rel=noise_rel, seed=seed,
-                                   dropout_prob=dropout_prob),
-        opportunistic=opportunistic,
         jit_policy=jit_policy,
         margin_sigmas=margin_sigmas,
         keepalive_factor=keepalive_factor,
         amort_factor=amort_factor,
         eager_max_per_invocation=eager_max_per_invocation,
+        opportunistic=opportunistic,
     )
-    run.start()
-    sim.run()
-    m = run.metrics
-    m.n_deploys = cluster.n_deploys
-    m.cost_usd = m.container_seconds * cluster.cfg.price_per_container_s
-    return m
+    return run_job(
+        job, policy,
+        cluster_config=cluster_config,
+        estimator=estimator,
+        t_pair_s=t_pair_s,
+        seed=seed,
+        noise_rel=noise_rel,
+        dropout_prob=dropout_prob,
+    )

@@ -58,6 +58,8 @@ class FLJobRuntime:
         seed: int = 0,
         epochs_per_round: int = 1,
         interpret: bool = True,
+        cluster_config: Optional[ClusterConfig] = None,
+        estimator: Optional[AggregationEstimator] = None,
     ):
         self.cfg = cfg
         self.spec = spec
@@ -101,8 +103,8 @@ class FLJobRuntime:
         )
         # ---- scheduling machinery -------------------------------------------
         self.predictor = UpdatePredictor(spec)
-        self.estimator = self._make_estimator(interpret)
-        self.cluster_cfg = ClusterConfig()
+        self.estimator = estimator or self._make_estimator(interpret)
+        self.cluster_cfg = cluster_config or ClusterConfig()
         self._eval = jax.jit(lambda p, b: M.loss_fn(cfg, p, b)[0])
         self.records: List[RoundRecord] = []
 
@@ -179,6 +181,21 @@ class FLJobRuntime:
         )
         self.records.append(rec)
         return rec
+
+    def metrics(self) -> JobMetrics:
+        """§6.2 metrics of the (virtual) JIT timeline over the real rounds,
+        in the same shape the simulation vehicles produce."""
+        m = JobMetrics(self.spec.job_id, "jit")
+        m.round_latencies = [r.latency for r in self.records]
+        m.rounds_done = len(self.records)
+        m.updates_received = len(self.records) * self.spec.n_parties
+        m.container_seconds = sum(r.container_seconds for r in self.records)
+        m.cost_usd = m.container_seconds * self.cluster_cfg.price_per_container_s
+        m.jit_deploys = m.n_deploys = len(self.records)
+        m.predictions = [(r.t_rnd_pred, r.t_agg_pred) for r in self.records]
+        if self.records:
+            m.finished_at = self.records[-1].completion
+        return m
 
     def run(self, rounds: Optional[int] = None, verbose: bool = True
             ) -> List[RoundRecord]:

@@ -3,8 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional hypothesis (requirements-dev.txt)
 
 from repro.core.jobspec import FLJobSpec, PartySpec
 from repro.core.prediction import (

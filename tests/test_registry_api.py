@@ -1,0 +1,227 @@
+"""The pluggable strategy registry + `repro.api.Platform` facade:
+unknown-name errors, PolicyConfig validation, in-test custom-strategy
+registration running end-to-end, shim/facade equivalence, the margin_sigmas
+knob, and the multi-job scheduler vehicle."""
+import numpy as np
+import pytest
+
+from repro.api import Platform, run_job
+from repro.core import (
+    FLJobSpec,
+    PartySpec,
+    PolicyConfig,
+    STRATEGIES,
+    available_strategies,
+    get_strategy,
+    register_strategy,
+    run_strategy,
+)
+from repro.core.policy import AggregationStrategy, _REGISTRY
+
+
+def make_job(n=20, mode="active", rounds=4, seed=0, job_id=None):
+    rng = np.random.default_rng(seed)
+    parties = {}
+    for i in range(n):
+        pid = f"p{i}"
+        if mode == "intermittent":
+            parties[pid] = PartySpec(pid, mode="intermittent",
+                                     dataset_size=1000)
+        else:
+            parties[pid] = PartySpec(
+                pid, epoch_time_s=float(rng.uniform(60, 180)),
+                dataset_size=1000)
+    return FLJobSpec(
+        job_id=job_id or f"reg-{mode}-{n}", model_arch="x",
+        model_bytes=50 << 20, rounds=rounds,
+        t_wait_s=600.0 if mode == "intermittent" else None,
+        parties=parties,
+    )
+
+
+# ---- registry ---------------------------------------------------------------
+def test_builtins_registered_and_strategies_derived():
+    assert set(STRATEGIES) == {
+        "eager_ao", "eager_serverless", "batched", "lazy", "jit"}
+    # STRATEGIES is derived from (a snapshot of) the registry
+    assert set(STRATEGIES) <= set(available_strategies())
+    for name in STRATEGIES:
+        assert get_strategy(name).name == name
+
+
+def test_unknown_strategy_raises_clear_error():
+    with pytest.raises(ValueError, match="unknown aggregation strategy"):
+        get_strategy("nope")
+    with pytest.raises(ValueError, match="available"):
+        run_job(make_job(), "definitely-not-registered")
+    with pytest.raises(ValueError, match="register_strategy"):
+        Platform().submit(make_job(), PolicyConfig(strategy="nope"))
+
+
+def test_policy_config_validated_at_construction():
+    for bad in [
+        dict(batch_trigger=0),
+        dict(jit_policy="psychic"),
+        dict(margin_sigmas=-1.0),
+        dict(keepalive_factor=-0.1),
+        dict(amort_factor=0.0),
+        dict(eager_max_per_invocation=0),
+        dict(strategy=""),
+    ]:
+        with pytest.raises(ValueError):
+            PolicyConfig(**bad)
+    # replace() re-validates
+    with pytest.raises(ValueError):
+        PolicyConfig().replace(batch_trigger=-3)
+
+
+# ---- custom strategy, end-to-end through Platform ---------------------------
+def test_custom_strategy_runs_end_to_end():
+    """A strategy added in-test (no engine edits) runs through Platform and
+    produces coherent JobMetrics — the plugin seam the redesign is for."""
+
+    @register_strategy("half-batch")
+    class HalfBatch(AggregationStrategy):
+        """Deploy once half the parties have reported, then drain eagerly."""
+
+        def on_update(self):
+            e = self.engine
+            if e.stream_deployed:
+                e.stream_feed()
+            elif e.arrived * 2 >= e.job.n_parties or e.all_arrived():
+                e.stream_deploy()
+
+        def on_window_close(self):
+            if self.engine.pending:
+                self.engine.stream_deploy()
+                self.engine.stream_feed()
+
+        def on_task_done(self):
+            e = self.engine
+            if e.stream_deployed and e.pending:
+                e.stream_feed()
+
+    try:
+        assert "half-batch" in available_strategies()
+        job = make_job(rounds=3, job_id="custom-job")
+        platform = Platform()
+        platform.submit(job, PolicyConfig(strategy="half-batch"), seed=1)
+        m = platform.run()[job.job_id]
+        assert m.strategy == "half-batch"
+        assert m.rounds_done == 3
+        assert m.updates_received == 20 * 3
+        assert m.container_seconds > 0
+        assert len(m.round_latencies) == 3
+        # cheaper than always-on, costlier than pure JIT deferral
+        ao = run_job(make_job(rounds=3), "eager_ao", seed=1)
+        assert m.container_seconds < ao.container_seconds
+    finally:
+        _REGISTRY.pop("half-batch", None)  # keep the registry test-hermetic
+
+
+# ---- shim equivalence -------------------------------------------------------
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_run_strategy_shim_matches_platform(strategy):
+    """The backward-compatible run_strategy shim and the Platform facade
+    produce identical metrics for a fixed seed."""
+    kw = dict(t_pair_s=0.05, seed=7, noise_rel=0.05)
+    old = run_strategy(make_job(seed=2), strategy, batch_trigger=5, **kw)
+    platform = Platform(t_pair_s=0.05)
+    platform.submit(make_job(seed=2),
+                    PolicyConfig(strategy=strategy, batch_trigger=5),
+                    seed=7, noise_rel=0.05)
+    new = platform.run()[old.job_id]
+    assert old.round_latencies == new.round_latencies
+    assert old.container_seconds == new.container_seconds
+    assert old.n_deploys == new.n_deploys
+    assert old.cost_usd == new.cost_usd
+
+
+def test_run_strategy_deterministic_given_seed():
+    a = run_strategy(make_job(), "jit", t_pair_s=0.05, seed=7)
+    b = run_strategy(make_job(), "jit", t_pair_s=0.05, seed=7)
+    assert a.round_latencies == b.round_latencies
+    assert a.container_seconds == b.container_seconds
+
+
+# ---- margin_sigmas is live --------------------------------------------------
+def test_margin_sigmas_changes_orderstat_schedule():
+    """The orderstat safety margin must actually shift JIT behaviour (the
+    knob was formerly accepted and ignored)."""
+    # the predicted last arrival moves later with the margin, capped at the
+    # t_wait window boundary
+    est = {}
+    for ms in [0.0, 2.0, 50.0]:
+        platform = Platform(t_pair_s=0.05)
+        engine = platform.submit(make_job(mode="intermittent", n=40),
+                                 PolicyConfig(strategy="jit", margin_sigmas=ms))
+        est[ms] = engine.impl._expected_t_rnd()
+    assert est[0.0] < est[2.0] <= est[50.0] <= 600.0
+    # ...and the shifted backlog-fill trigger is observable end to end
+    # (t_pair large enough that the trigger, not all-arrived, decides)
+    base = run_job(make_job(mode="intermittent", n=40, rounds=6),
+                   PolicyConfig(strategy="jit", margin_sigmas=0.0),
+                   t_pair_s=0.5, seed=0)
+    wide = run_job(make_job(mode="intermittent", n=40, rounds=6),
+                   PolicyConfig(strategy="jit", margin_sigmas=8.0),
+                   t_pair_s=0.5, seed=0)
+    assert base.rounds_done == wide.rounds_done == 6
+    assert (base.round_latencies != wide.round_latencies
+            or base.container_seconds != wide.container_seconds)
+
+
+# ---- multi-job vehicles -----------------------------------------------------
+def test_platform_multi_engine_contention():
+    """Several simulated jobs share one platform cluster and all finish."""
+    platform = Platform(t_pair_s=0.05)
+    jobs = [make_job(rounds=2, seed=i, job_id=f"multi{i}") for i in range(3)]
+    for i, job in enumerate(jobs):
+        platform.submit(job, "jit", seed=i)
+    out = platform.run()
+    assert set(out) == {j.job_id for j in jobs}
+    for j in jobs:
+        assert out[j.job_id].rounds_done == 2
+        assert out[j.job_id].n_deploys > 0  # per-job, not cluster-wide
+    assert (sum(m.n_deploys for m in out.values())
+            == platform.cluster.n_deploys)
+
+
+def test_platform_scheduled_vehicle():
+    """The Fig. 6 multi-job scheduler runs through the same facade."""
+    platform = Platform(t_pair_s=0.3)
+    jobs = [make_job(n=10, rounds=3, seed=i, job_id=f"sched{i}")
+            for i in range(2)]
+    for job in jobs:
+        platform.submit_scheduled(job)
+    out = platform.run()
+    for job in jobs:
+        m = out[job.job_id]
+        assert m.rounds_done == 3
+        assert len(m.round_lateness) == 3
+        assert m.container_seconds > 0
+        # finished_at is this job's last aggregation, not the sim end
+        assert m.finished_at is not None
+        assert m.finished_at <= platform.sim.now
+    # scheduler settings are platform-wide: conflicting later kwargs raise
+    p2 = Platform(t_pair_s=0.3)
+    p2.submit_scheduled(make_job(n=5, rounds=1, job_id="c0"),
+                        priority_policy="deadline")
+    with pytest.raises(ValueError, match="already created"):
+        p2.submit_scheduled(make_job(n=5, rounds=1, job_id="c1"),
+                            priority_policy="fifo")
+
+
+def test_platform_is_single_shot():
+    platform = Platform()
+    platform.submit(make_job(rounds=1), "lazy")
+    platform.run()
+    with pytest.raises(RuntimeError, match="already called"):
+        platform.run()
+    # late submissions (which could never execute) are rejected too
+    with pytest.raises(RuntimeError, match="already called"):
+        platform.submit(make_job(job_id="late"), "jit")
+    # duplicate ids rejected on one platform
+    p2 = Platform()
+    p2.submit(make_job(job_id="dup"), "jit")
+    with pytest.raises(ValueError, match="already submitted"):
+        p2.submit(make_job(job_id="dup"), "lazy")

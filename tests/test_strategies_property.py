@@ -3,8 +3,11 @@ job shape / strategy / seed, the simulation must conserve updates, bill
 no-less-than the pure fuse work, respect latency >= 0, and JIT must meet
 the intermittent SLA window."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # this module is property-based end to end
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import FLJobSpec, PartySpec, run_strategy
 from repro.core.cluster import ClusterConfig

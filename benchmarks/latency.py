@@ -21,12 +21,18 @@ def batch_trigger_for(n: int) -> int:
     return {10: 2, 100: 10, 1000: 100, 10000: 100}[n]
 
 
-def run(full: bool = False, rounds: int = 20):
-    counts = PARTY_COUNTS + ([10000] if full else [])
+def run(full: bool = False, rounds: int = 20, *, counts=None,
+        workloads=None, figures=None):
+    """Full CLI grid by default; the keyword filters let the golden smoke
+    tests lock one tiny cell of the grid without running the rest."""
+    if counts is None:
+        counts = PARTY_COUNTS + ([10000] if full else [])
+    if figures is None:
+        figures = [("fig7", "intermittent-hetero"),
+                   ("fig8", "active-hetero")]
     rows = []
-    for wl in WORKLOADS:
-        for fig, part in [("fig7", "intermittent-hetero"),
-                          ("fig8", "active-hetero")]:
+    for wl in (WORKLOADS if workloads is None else workloads):
+        for fig, part in figures:
             for n in counts:
                 for s in STRATS:
                     job = build_job(wl, n, part, rounds=rounds)

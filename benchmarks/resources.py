@@ -19,11 +19,15 @@ PARTY_COUNTS = [10, 100, 1000]
 MODES = ["active-homo", "active-hetero", "intermittent-hetero"]
 
 
-def run(full: bool = False, rounds: int = 50):
-    counts = PARTY_COUNTS + ([10000] if full else [])
+def run(full: bool = False, rounds: int = 50, *, counts=None,
+        workloads=None, modes=None):
+    """Full CLI grid by default; the keyword filters let the golden smoke
+    tests lock one tiny cell of the grid without running the rest."""
+    if counts is None:
+        counts = PARTY_COUNTS + ([10000] if full else [])
     rows = []
-    for wl in WORKLOADS:
-        for mode in MODES:
+    for wl in (WORKLOADS if workloads is None else workloads):
+        for mode in (MODES if modes is None else modes):
             for n in counts:
                 res = {}
                 for s in ["jit", "batched", "eager_serverless", "eager_ao"]:

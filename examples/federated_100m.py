@@ -7,11 +7,18 @@ real optimizer, real fusion kernels, real prediction/scheduling — CPU-sized
 rounds (expect ~20-40 min on one core; use --rounds/--sequences to shrink).
 
   PYTHONPATH=src python examples/federated_100m.py [--rounds N] [--sequences N]
+
+The scheduling timeline is priced by replaying the measured arrivals
+through the strategy registry: pass --policy to cost the same kind of run
+under eager_ao / eager_serverless / batched / lazy instead of the default
+deterministic JIT timeline (see also benchmarks/real_ablation.py, which
+prices ALL strategies from one shared run).
 """
 import argparse
 
 from repro import configs
 from repro.api import Platform
+from repro.core import STRATEGIES
 from repro.core.jobspec import FLJobSpec, PartySpec
 from repro.models import model as M
 
@@ -24,6 +31,9 @@ def main():
     ap.add_argument("--sequences", type=int, default=192)
     ap.add_argument("--parties", type=int, default=4)
     ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--policy", choices=list(STRATEGIES), default=None,
+                    help="deployment strategy to price the run under "
+                         "(default: the deterministic JIT timeline)")
     args = ap.parse_args()
 
     cfg = configs.get_config("example-100m")
@@ -46,12 +56,13 @@ def main():
         parties={f"p{i}": PartySpec(f"p{i}") for i in range(args.parties)},
     )
     result = Platform().train(
-        cfg, spec, n_sequences=args.sequences, heterogeneous=True,
-        eval_sequences=32, seed=0, verbose=True,
+        cfg, spec, policy=args.policy, n_sequences=args.sequences,
+        heterogeneous=True, eval_sequences=32, seed=0, verbose=True,
     )
     records = result.records
     print("\nfinal eval loss:", records[-1].global_loss)
-    print(f"JIT container-seconds: {result.metrics.container_seconds:.1f} "
+    print(f"{result.metrics.strategy} container-seconds: "
+          f"{result.metrics.container_seconds:.1f} "
           f"(${result.metrics.cost_usd:.4f})")
     pred_errs = [
         abs(r.t_rnd_pred - max(r.arrivals.values())) / max(r.arrivals.values())

@@ -20,8 +20,13 @@ facade:
     platform.submit_scheduled(job_b)
     metrics = platform.run()                      # -> {job_id: JobMetrics}
 
-    # 3. real-JAX federated training (parties + Pallas fusion kernels)
-    result = platform.train(model_cfg, job)       # -> TrainingResult
+    # 3. real-JAX federated training (parties + Pallas fusion kernels),
+    #    priced under ANY registered strategy via the measured-arrival replay
+    result = platform.train(model_cfg, job)             # -> TrainingResult
+    ao = replay_measured(job, result.runtime.measured_rounds, "eager_ao")
+
+``replay_measured`` re-prices one real run's recorded arrivals under any
+registered policy without retraining (see ``benchmarks/real_ablation.py``).
 
 Policies are ``PolicyConfig`` values resolved against the pluggable
 strategy registry (``repro.core.policy``); a strategy registered with
@@ -40,11 +45,11 @@ from repro.core.estimator import AggregationEstimator
 from repro.core.events import Simulator
 from repro.core.jobspec import FLJobSpec
 from repro.core.metrics import JobMetrics
-from repro.core.policy import PolicyConfig, as_policy
+from repro.core.policy import PolicyConfig, as_policy, as_replay_policy
 from repro.core.scheduler import JITScheduler, JobState
-from repro.core.strategies import ArrivalModel, RoundEngine
+from repro.core.strategies import ArrivalModel, MeasuredArrivals, RoundEngine
 
-__all__ = ["Platform", "TrainingResult", "run_job"]
+__all__ = ["Platform", "TrainingResult", "replay_measured", "run_job"]
 
 
 @dataclasses.dataclass
@@ -69,6 +74,7 @@ class Platform:
         self.sim = Simulator()
         self.cluster_config = cluster_config or ClusterConfig()
         self.cluster = Cluster(self.sim, self.cluster_config)
+        self._estimator_explicit = estimator is not None
         self.estimator = estimator or AggregationEstimator(t_pair_s)
         self.engines: Dict[str, RoundEngine] = {}
         self._scheduler: Optional[JITScheduler] = None
@@ -173,6 +179,11 @@ class Platform:
         for job_id, engine in self.engines.items():
             m = engine.metrics
             m.n_deploys = self.cluster.n_deploys_by_job.get(job_id, 0)
+            # read billing live so runs stopped early with run(until=...)
+            # report what the cluster actually billed (identical to the
+            # engine's own value once the job completes)
+            m.container_seconds = self.cluster.container_seconds_by_job.get(
+                job_id, 0.0)
             m.cost_usd = m.container_seconds * price
             out[job_id] = m
         if self._scheduler is not None:
@@ -200,24 +211,40 @@ class Platform:
         self,
         model_cfg,
         job: FLJobSpec,
+        policy: Union[PolicyConfig, str, None] = None,
         *,
         rounds: Optional[int] = None,
         verbose: bool = False,
         **runtime_kw,
     ) -> TrainingResult:
-        """Run real federated training (JAX parties + Pallas fusion kernels
-        + the JIT scheduling timeline) for `job` on `model_cfg`.
+        """Run real federated training (JAX parties + Pallas fusion kernels)
+        for `job` on `model_cfg`, priced under `policy`'s deployment
+        strategy on a virtual clock driven by the measured arrivals.
+
+        Any name in the strategy registry is a valid policy — the same real
+        training run can be costed as JIT, always-on, eager-λ, batched-λ or
+        lazy. None and the bare name "jit" select the deterministic JIT
+        timeline (``PolicyConfig(strategy="jit", jit_policy="fixed")``)
+        that this vehicle has always reported; pass
+        ``PolicyConfig(strategy="jit")`` explicitly for the orderstat
+        simulation policy.
 
         `runtime_kw` is forwarded to ``repro.fl.job.FLJobRuntime``
         (n_sequences, heterogeneous, seed, epochs_per_round, interpret, ...).
-        The platform's cluster config prices the virtual JIT timeline; the
-        estimator is measured from the real fusion kernel unless one is
-        passed explicitly via ``runtime_kw["estimator"]``.
+        The platform's cluster config prices the virtual timeline. The
+        estimator: ``runtime_kw["estimator"]`` if given, else a copy of the
+        platform's when the platform was built with an explicit one (the
+        copy keeps the fixed-JIT replay's online calibration out of the
+        shared simulation estimator), else §5.4 offline measurement on the
+        real fusion kernel.
         """
         from repro.fl.job import FLJobRuntime  # deferred: imports jax
 
         runtime_kw.setdefault("cluster_config", self.cluster_config)
-        runtime = FLJobRuntime(model_cfg, job, **runtime_kw)
+        if self._estimator_explicit:
+            runtime_kw.setdefault(
+                "estimator", dataclasses.replace(self.estimator))
+        runtime = FLJobRuntime(model_cfg, job, policy=policy, **runtime_kw)
         records = runtime.run(rounds=rounds, verbose=verbose)
         return TrainingResult(
             metrics=runtime.metrics(), records=records, runtime=runtime,
@@ -233,6 +260,56 @@ class Platform:
             self._scheduler is not None and job_id in self._scheduler.jobs
         ):
             raise ValueError(f"job {job_id!r} already submitted")
+
+
+def replay_measured(
+    job: FLJobSpec,
+    measured_rounds: List[Dict[str, Any]],
+    policy: Union[PolicyConfig, str, None] = None,
+    *,
+    cluster_config: Optional[ClusterConfig] = None,
+    estimator: Optional[AggregationEstimator] = None,
+    t_pair_s: float = 0.05,
+    single_worker_fuse: bool = True,
+) -> JobMetrics:
+    """Price *measured* per-party arrivals under any registered strategy.
+
+    `measured_rounds` is one dict per round mapping party id to a
+    ``(train_s, comm_s)`` pair — exactly what ``FLJobRuntime`` records in
+    ``measured_rounds`` — and is replayed on a fresh virtual cluster, so a
+    single real training run can be costed under every deployment policy
+    (the real-training analogue of ``run_job``). The default policy is the
+    deterministic JIT timeline (``jit_policy="fixed"``); pass any
+    ``PolicyConfig`` or registered strategy name to compare. With
+    ``single_worker_fuse`` (default) the per-update fuse cost is the raw
+    measured t_pair, matching the real runtime's streaming aggregator.
+
+    None and the bare name "jit" both select the fixed timeline; pass
+    ``PolicyConfig(strategy="jit")`` explicitly for the orderstat
+    simulation policy. A passed estimator is copied — the fixed-JIT
+    replay's online calibration never leaks back into the caller's.
+    """
+    if not measured_rounds:
+        raise ValueError(
+            "replay_measured needs at least one round of measured arrivals")
+    policy = as_replay_policy(policy)
+    job = dataclasses.replace(job, rounds=len(measured_rounds))
+    sim = Simulator()
+    cc = cluster_config or ClusterConfig()
+    cluster = Cluster(sim, cc)
+    est = (dataclasses.replace(estimator) if estimator is not None
+           else AggregationEstimator(t_pair_s))
+    engine = RoundEngine(
+        sim, cluster, job, est, policy,
+        arrival_model=MeasuredArrivals(measured_rounds),
+        single_worker_fuse=single_worker_fuse,
+    )
+    engine.start()
+    sim.run()
+    m = engine.metrics
+    m.n_deploys = cluster.n_deploys_by_job.get(job.job_id, 0)
+    m.cost_usd = m.container_seconds * cc.price_per_container_s
+    return m
 
 
 def run_job(

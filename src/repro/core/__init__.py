@@ -20,15 +20,22 @@ from repro.core.estimator import (  # noqa: F401
 from repro.core.events import Simulator  # noqa: F401
 from repro.core.cluster import Cluster, ClusterConfig  # noqa: F401
 from repro.core.jobspec import FLJobSpec, PartySpec  # noqa: F401
-from repro.core.metrics import JobMetrics, savings  # noqa: F401
+from repro.core.metrics import (  # noqa: F401
+    JobMetrics,
+    aggregation_latency,
+    savings,
+    sla_lateness,
+)
 from repro.core.prediction import (  # noqa: F401
     LinearEstimator,
     PeriodicTracker,
     UpdatePredictor,
 )
 from repro.core.policy import (  # noqa: F401
+    FIXED_JIT_POLICY,
     AggregationStrategy,
     PolicyConfig,
+    as_replay_policy,
     available_strategies,
     get_strategy,
     register_strategy,
@@ -38,6 +45,8 @@ from repro.core.scheduler import JITScheduler  # noqa: F401
 from repro.core.strategies import (  # noqa: F401
     STRATEGIES,
     ArrivalModel,
+    ArrivalSource,
+    MeasuredArrivals,
     RoundEngine,
     StrategyRun,
     run_strategy,

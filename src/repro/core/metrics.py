@@ -9,6 +9,25 @@ from typing import Dict, List, Optional, Tuple
 AZURE_PRICE_PER_CONTAINER_S = 0.0002692  # US$ (paper Fig. 9 source [8])
 
 
+# --------------------------------------------------------------------------
+# The two per-round timeline metrics, defined ONCE for all three execution
+# vehicles (simulation RoundEngine, multi-job JITScheduler, real-training
+# FLJobRuntime replay). §6.2 reports aggregation latency; §5.5 tracks how
+# late a round completed against the predicted round end (the SLA the JIT
+# timer defends).
+# --------------------------------------------------------------------------
+def aggregation_latency(completion_t: float, last_arrival_t: float) -> float:
+    """§6.2 aggregation latency: completion − last update arrival."""
+    return completion_t - last_arrival_t
+
+
+def sla_lateness(completion_t: float, round_start_t: float,
+                 t_rnd_pred: float) -> float:
+    """§5.5 SLA lateness: completion − predicted round end
+    (round_start + t_rnd). Negative values mean the round beat the SLA."""
+    return completion_t - (round_start_t + t_rnd_pred)
+
+
 @dataclasses.dataclass
 class JobMetrics:
     job_id: str

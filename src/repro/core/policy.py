@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, ClassVar, Dict, Tuple, Type
 
-JIT_POLICIES = ("orderstat", "paper")
+JIT_POLICIES = ("orderstat", "paper", "fixed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +33,12 @@ class PolicyConfig:
       batch_trigger             batched-λ: updates per deployment (§3)
       jit_policy                "paper" = Fig. 6 literal timer;
                                 "orderstat" = order-statistic t_rnd +
-                                backlog-fill trigger (beyond-paper default)
+                                backlog-fill trigger (beyond-paper default);
+                                "fixed" = fully deterministic timeline:
+                                deploy exactly at t_rnd − t_agg, stay hot
+                                until the round completes, calibrate the
+                                estimator online (the real-training
+                                vehicle's replay default)
       margin_sigmas             orderstat safety margin: the expected last
                                 arrival is pushed ``margin_sigmas`` standard
                                 deviations of the max order statistic later
@@ -85,6 +90,12 @@ class PolicyConfig:
         return dataclasses.replace(self, **over)
 
 
+#: The real-training replay default: the deterministic JIT timeline
+#: (deploy exactly at t_rnd − t_agg, container hot through completion,
+#: estimator calibrated online) that ``FLJobRuntime`` has always priced.
+FIXED_JIT_POLICY = PolicyConfig(strategy="jit", jit_policy="fixed")
+
+
 def as_policy(policy) -> PolicyConfig:
     """Coerce None / a strategy name / a PolicyConfig into a PolicyConfig."""
     if policy is None:
@@ -95,6 +106,19 @@ def as_policy(policy) -> PolicyConfig:
         return policy
     raise TypeError(
         f"policy must be a strategy name or PolicyConfig, got {type(policy)}")
+
+
+def as_replay_policy(policy) -> PolicyConfig:
+    """``as_policy`` for the real-training / measured-replay vehicles:
+    None and the bare name "jit" both resolve to the deterministic
+    ``FIXED_JIT_POLICY`` (the vehicles' regression-locked default), so a
+    loop over strategy NAMES prices the same jit timeline the vehicle
+    reports by default. An explicit ``PolicyConfig`` is honoured as-is —
+    ``PolicyConfig(strategy="jit")`` still selects the orderstat
+    simulation policy."""
+    if policy is None or policy == "jit":
+        return FIXED_JIT_POLICY
+    return as_policy(policy)
 
 
 class AggregationStrategy:

@@ -20,6 +20,7 @@ from repro.core.cluster import Cluster, Task
 from repro.core.estimator import AggregationEstimator
 from repro.core.events import EventHandle, Simulator
 from repro.core.jobspec import FLJobSpec
+from repro.core.metrics import sla_lateness
 from repro.core.prediction import UpdatePredictor
 from repro.core.queue import MessageQueue
 
@@ -131,7 +132,7 @@ class JITScheduler:
             st.timer.cancel()
         observed = t - st.round_start - max(0.0, st.t_rnd - st.t_agg)
         self.est.calibrate(max(observed, 1e-6), st.job, st.job.quorum)
-        st.lateness.append(t - (st.round_start + st.t_rnd))
+        st.lateness.append(sla_lateness(t, st.round_start, st.t_rnd))
         st.finished_at = t
         st.done_rounds += 1
         st.round_idx += 1

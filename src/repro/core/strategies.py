@@ -55,12 +55,22 @@ Beyond-paper refinements (``jit_policy="orderstat"``, the default):
 ``jit_policy="paper"`` reproduces Fig. 6 literally (fixed timer, t_wait
 prediction for intermittent parties). Both policies share the
 work-conserving defer, all-arrived trigger and keep-alive economics.
+``jit_policy="fixed"`` is the fully deterministic timeline the real
+training vehicle (``repro.fl.job.FLJobRuntime``) has always priced: deploy
+exactly at t_rnd − t_agg, keep the container hot until the round's last
+update is fused, and calibrate the t_agg estimator online from the
+observed drain.
+
+The engine is driven by an ``ArrivalSource``: the sampled §6.3
+``ArrivalModel`` for simulation, or ``MeasuredArrivals`` replaying real
+measured train/comm times — so one real training run can be priced under
+every registered strategy (see ``repro.api.replay_measured``).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Set, Union
+from typing import Callable, Dict, List, Optional, Set, Tuple, Union
 
 import numpy as np
 
@@ -68,7 +78,7 @@ from repro.core.cluster import AlwaysOnContainer, Cluster, ClusterConfig
 from repro.core.estimator import AggregationEstimator, usable_cores
 from repro.core.events import Simulator
 from repro.core.jobspec import FLJobSpec
-from repro.core.metrics import JobMetrics
+from repro.core.metrics import JobMetrics, aggregation_latency, sla_lateness
 from repro.core.policy import (
     AggregationStrategy,
     PolicyConfig,
@@ -81,10 +91,81 @@ from repro.core.prediction import UpdatePredictor
 
 
 # --------------------------------------------------------------------------
+# arrival sources: where a round's update-arrival offsets come from
+# --------------------------------------------------------------------------
+class ArrivalSource:
+    """What drives a ``RoundEngine``: per-party update-arrival offsets.
+
+    Two implementations ship: the paper's §6.3 sampled ``ArrivalModel``
+    (simulation) and ``MeasuredArrivals`` (replay of real measured
+    train/comm times from ``FLJobRuntime``). The engine is agnostic — the
+    same strategy plugins price either source, which is what lets one real
+    training run be costed under every registered deployment policy.
+    """
+
+    def start_round(self, round_idx: int) -> None:
+        """Called by the engine when round `round_idx` begins."""
+
+    def sample_arrival(self, pid: str) -> Optional[float]:
+        """Offset of the party's update arrival from the round start, or
+        None when the party does not report this round."""
+        raise NotImplementedError
+
+    def sample_train_time(self, pid: str, arrival_offset: float) -> float:
+        """The training time implied by an arrival (predictor feedback)."""
+        raise NotImplementedError
+
+
+class MeasuredArrivals(ArrivalSource):
+    """Replays *measured* per-party ``(train_s, comm_s)`` pairs, one dict
+    per round; the arrival offset is their sum and the exact train time is
+    fed back to the predictor (no lossy round-tripping through offsets).
+
+    Rounds can be supplied up front (offline replay, ``replay_measured``)
+    or pushed incrementally as real training produces them
+    (``FLJobRuntime`` with gated engine rounds). A party absent from a
+    round's dict simply does not report that round.
+    """
+
+    def __init__(self, rounds: Optional[
+            List[Dict[str, Tuple[float, float]]]] = None):
+        self._rounds: List[Dict[str, Tuple[float, float]]] = [
+            dict(r) for r in (rounds or [])
+        ]
+        self._cur: Dict[str, Tuple[float, float]] = {}
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self._rounds)
+
+    def push_round(self, measured: Dict[str, Tuple[float, float]]) -> None:
+        """Append one round of measured (train_s, comm_s) per party."""
+        self._rounds.append(dict(measured))
+
+    def start_round(self, round_idx: int) -> None:
+        if round_idx >= len(self._rounds):
+            raise IndexError(
+                f"no measured arrivals for round {round_idx} "
+                f"(have {len(self._rounds)}); push_round() before the "
+                f"engine starts it")
+        self._cur = self._rounds[round_idx]
+
+    def sample_arrival(self, pid: str) -> Optional[float]:
+        rec = self._cur.get(pid)
+        if rec is None:
+            return None
+        train, comm = rec
+        return train + comm
+
+    def sample_train_time(self, pid: str, arrival_offset: float) -> float:
+        return self._cur[pid][0]
+
+
+# --------------------------------------------------------------------------
 # party arrival emulation (§6.3)
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
-class ArrivalModel:
+class ArrivalModel(ArrivalSource):
     """Samples actual (train, comm) times per party per round.
 
     Active parties: gaussian noise around their true periodic time.
@@ -161,11 +242,12 @@ class RoundEngine:
         estimator: AggregationEstimator,
         policy: Union[PolicyConfig, str],
         *,
-        arrival_model: Optional[ArrivalModel] = None,
+        arrival_model: Optional[ArrivalSource] = None,
         on_job_done: Optional[Callable[[], None]] = None,
         on_round_complete: Optional[Callable[[int, float], None]] = None,
         external_arrivals: bool = False,  # updates injected via inject_update
         gated_rounds: bool = False,  # next round waits for release_round()
+        single_worker_fuse: bool = False,  # w_u = raw t_pair (real runtime)
     ):
         policy = as_policy(policy)
         job.validate()
@@ -178,16 +260,12 @@ class RoundEngine:
         self.on_round_complete = on_round_complete
         self.external_arrivals = external_arrivals
         self.gated_rounds = gated_rounds
+        self.single_worker_fuse = single_worker_fuse
         self._release_pending = False
         self._round_waiting = None  # continuation when gated
         self.predictor = UpdatePredictor(job)
         self.metrics = JobMetrics(job.job_id, policy.strategy)
-        # per-update fuse work on one deployment (paper: t_pair scaled by
-        # usable cores x aggregator count)
-        res = estimator.resources
-        self.w_u = estimator.t_pair_s / (
-            usable_cores(res, job.model_bytes) * res.n_aggregators
-        )
+        self._refresh_fuse_cost()
         self.bcast_comm = job.model_bytes / estimator.resources.intra_dc_bw
         cc = self.cluster.cfg
         self.oh_startup = cc.deploy_overhead_s + cc.state_load_s
@@ -204,6 +282,20 @@ class RoundEngine:
         self.impl.on_job_start()
         self._start_round()
 
+    def _refresh_fuse_cost(self) -> None:
+        """Per-update fuse work on one deployment, re-read every round so
+        online estimator calibration (the "fixed" replay policy) is
+        reflected. Simulation default: t_pair scaled by usable cores x
+        aggregator count (paper §5.4); the real runtime's streaming
+        aggregator is a single worker, so w_u = raw t_pair."""
+        if self.single_worker_fuse:
+            self.w_u = self.est.t_pair_s
+        else:
+            res = self.est.resources
+            self.w_u = self.est.t_pair_s / (
+                usable_cores(res, self.job.model_bytes) * res.n_aggregators
+            )
+
     def _reset_round_state(self):
         self.pending: List[float] = []  # arrival times not yet aggregated
         self.processed = 0
@@ -219,11 +311,14 @@ class RoundEngine:
         self.stream_start_t: Optional[float] = None
         self._close_timer = None
         self.round_target = self.job.n_parties  # reduced at window close
+        self.round_deploy_t: Optional[float] = None  # first deploy this round
         self.impl.on_round_reset()
 
     def _start_round(self) -> None:
         self._reset_round_state()
+        self._refresh_fuse_cost()
         self.round_start = self.sim.now
+        self.arrivals.start_round(self.round)
         # schedule this round's update arrivals (unless driven externally,
         # e.g. by edge-tier aggregators in the hierarchical topology)
         if not self.external_arrivals:
@@ -293,6 +388,8 @@ class RoundEngine:
         del self.pending[:k]
         self.inflight += k
         self.task_active = True
+        if self.round_deploy_t is None:
+            self.round_deploy_t = self.sim.now
         self.cluster.submit(
             self.job.job_id,
             priority=self.sim.now,  # FIFO among serverless tasks
@@ -306,6 +403,8 @@ class RoundEngine:
         if self.stream_deployed or self.processed + self.inflight >= self.round_target:
             return
         self.stream_deployed = True
+        if self.round_deploy_t is None:
+            self.round_deploy_t = self.sim.now
         self.cluster.record_deploy(self.job.job_id)
         self.metrics.jit_deploys += 1
         self.stream_start_t = self.sim.now
@@ -374,8 +473,13 @@ class RoundEngine:
 
     def _round_complete(self):
         done = self.impl.finish_round()
-        latency = done - (self.last_arrival or done)
-        self.metrics.round_latencies.append(latency)
+        last = done if self.last_arrival is None else self.last_arrival
+        self.metrics.round_latencies.append(aggregation_latency(done, last))
+        # §5.5 SLA lateness against this round's prediction, when the
+        # policy produced one (same definition as the scheduler vehicle)
+        if len(self.metrics.predictions) > len(self.metrics.round_lateness):
+            self.metrics.round_lateness.append(sla_lateness(
+                done, self.round_start, self.metrics.predictions[-1][0]))
         self.metrics.rounds_done += 1
         completed = self.round
         self.round += 1
@@ -524,17 +628,25 @@ class JIT(AggregationStrategy):
         self.armed = False  # past the deadline / all-arrived trigger
         self._timer = None
         self._t_rnd_exp = 0.0
+        self._trigger_abs = 0.0
         self.priority = 0.0
 
     def on_round_start(self):
         """Plan the deployment from predictions (Fig. 6)."""
         e = self.engine
-        self._t_rnd_exp = self._expected_t_rnd()
         t_rnd_sla = e.predictor.t_rnd()  # Fig. 6 lines 6-11
         t_agg = e.est.t_agg(e.job)  # Fig. 6 line 13
-        trigger = max(0.0, t_rnd_sla - t_agg - e.oh_startup)
+        if self.policy.jit_policy == "fixed":
+            # deterministic replay timeline: deploy exactly at t_rnd − t_agg
+            # (startup overhead spent after the trigger, as the real
+            # runtime's virtual timeline always priced it)
+            trigger = max(0.0, t_rnd_sla - t_agg)
+        else:
+            self._t_rnd_exp = self._expected_t_rnd()
+            trigger = max(0.0, t_rnd_sla - t_agg - e.oh_startup)
         e.metrics.predictions.append((t_rnd_sla, t_agg))
         self.priority = e.round_start + trigger  # §5.5 priority
+        self._trigger_abs = e.round_start + trigger
         self._timer = e.sim.schedule(trigger, self._timer_fire)
 
     # ---- prediction of the round end ------------------------------------
@@ -578,6 +690,8 @@ class JIT(AggregationStrategy):
         if e.stream_deployed:
             e.stream_feed()
             return
+        if self.policy.jit_policy == "fixed":
+            return  # deterministic timeline: wait for the planned trigger
         if e.all_arrived():
             # nothing left to wait for: trigger now
             self._arm()
@@ -621,7 +735,7 @@ class JIT(AggregationStrategy):
         e = self.engine
         if self.armed or e.stream_deployed:
             return
-        if e.pending:
+        if self.policy.jit_policy == "fixed" or e.pending:
             self._arm()
         else:
             # no pending updates: defer, retaining the priority (§5.5)
@@ -648,10 +762,25 @@ class JIT(AggregationStrategy):
         e = self.engine
         if e.inflight > 0:
             return  # later feeds still running: the stream is not dry yet
+        if self.policy.jit_policy == "fixed":
+            return  # deterministic timeline: hot from trigger to completion
         R, k = e.expected_remaining_makespan()
         if k > 0 and R <= self.policy.keepalive_factor * k * e.oh_cycle:
             return  # cheaper to idle hot than to checkpoint + redeploy
         e.stream_release()
+
+    def finish_round(self) -> float:
+        done = super().finish_round()
+        if self.policy.jit_policy == "fixed":
+            # the real runtime's online §5.4 feedback loop: refit t_pair
+            # from the observed drain (completion − max(trigger, last
+            # arrival)), visible to the next round's t_agg and w_u
+            e = self.engine
+            last = (self._trigger_abs if e.last_arrival is None
+                    else e.last_arrival)
+            e.est.calibrate(done - max(self._trigger_abs, last),
+                            e.job, max(e.processed, 1))
+        return done
 
 
 # Derived from the registry (built-ins register above, in §3 order). This

@@ -1,8 +1,11 @@
 import os
 
-# Tests run on the single real CPU device; ONLY launch/dryrun.py forces 512
-# host devices (in its own subprocess). Keep XLA deterministic and quiet.
+# 8 virtual host devices (matching scripts/test.sh) so sharding/mesh paths
+# exercise multi-device code even under a bare `pytest`; ONLY launch/dryrun.py
+# forces 512 host devices (in its own subprocess). Keep XLA deterministic and
+# quiet.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
 

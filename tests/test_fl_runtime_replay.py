@@ -1,0 +1,415 @@
+"""Golden regression for the measured-arrival replay that now powers
+``FLJobRuntime``: the default fixed-JIT policy must reproduce the
+pre-refactor hard-coded virtual timeline EXACTLY (to FP round-off), every
+registered strategy must price the same measured arrivals coherently, and
+the replay must be deterministic and party-order invariant."""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.api import replay_measured
+from repro.core import (
+    STRATEGIES,
+    AggregationEstimator,
+    ClusterConfig,
+    Cluster,
+    FLJobSpec,
+    MeasuredArrivals,
+    PartySpec,
+    PolicyConfig,
+    RoundEngine,
+    Simulator,
+    UpdatePredictor,
+)
+from repro.core.policy import FIXED_JIT_POLICY
+
+
+# --------------------------------------------------------------------------
+# fixtures: a job spec + realistic measured (train_s, comm_s) rounds
+# --------------------------------------------------------------------------
+def make_spec(n=4, rounds=3, job_id="replay"):
+    parties = {
+        f"p{i}": PartySpec(f"p{i}", epoch_time_s=10.0 + 5.0 * i,
+                           dataset_size=100, batch_size=8)
+        for i in range(n)
+    }
+    return FLJobSpec(job_id=job_id, model_arch="x", model_bytes=40 << 20,
+                     rounds=rounds, parties=parties)
+
+
+def gen_measured(spec, seed=0, noise=0.1):
+    """Measured rounds: spec epoch time +- noise, exact comm from bandwidth."""
+    rng = np.random.default_rng(seed)
+    m = spec.model_bytes
+    out = []
+    for _ in range(spec.rounds):
+        rnd = {}
+        for pid, p in spec.parties.items():
+            comm = m / p.bw_down + m / p.bw_up
+            rnd[pid] = (float(p.epoch_time_s * (1 + rng.normal(0, noise))),
+                        comm)
+        out.append(rnd)
+    return out
+
+
+# --------------------------------------------------------------------------
+# the pre-refactor FLJobRuntime virtual-JIT timeline, verbatim (this closed
+# form WAS src/repro/fl/job.py:run_round before the strategy-generic replay;
+# it is the reference the fixed-JIT replay is locked against)
+# --------------------------------------------------------------------------
+def pre_refactor_timeline(spec, measured_rounds, cc, est):
+    predictor = UpdatePredictor(spec)
+    records = []
+    for rnd in measured_rounds:
+        t_rnd_pred = predictor.t_rnd()
+        t_agg_pred = est.t_agg(spec)
+        trigger = max(0.0, t_rnd_pred - t_agg_pred)
+        arrivals = {}
+        for pid, (t, c) in rnd.items():
+            arrivals[pid] = t + c
+            predictor.observe_round(pid, t)
+        order = sorted(arrivals.values())
+        w_u = est.t_pair_s  # single-worker streaming fuse
+        busy = trigger + cc.deploy_overhead_s + cc.state_load_s
+        for a in order:
+            busy = max(busy, a) + w_u
+        completion = busy + cc.checkpoint_s
+        latency = completion - order[-1]
+        container_seconds = completion - trigger
+        est.calibrate(completion - max(trigger, order[-1]), spec,
+                      len(arrivals))
+        records.append(dict(
+            trigger=trigger, completion=completion, latency=latency,
+            container_seconds=container_seconds,
+            t_rnd_pred=t_rnd_pred, t_agg_pred=t_agg_pred,
+        ))
+    return records
+
+
+def replay_fixed_with_records(spec, measured_rounds, cc, est):
+    """Drive a RoundEngine exactly like FLJobRuntime does and extract
+    per-round (trigger, completion, latency, container_seconds)."""
+    sim = Simulator()
+    cluster = Cluster(sim, cc)
+    rows = []
+    state = {"cs": 0.0}
+
+    engine = RoundEngine(
+        sim, cluster, spec, est, FIXED_JIT_POLICY,
+        arrival_model=MeasuredArrivals(measured_rounds),
+        single_worker_fuse=True,
+    )
+
+    def on_done(r, t):
+        cs = cluster.container_seconds_by_job.get(spec.job_id, 0.0)
+        t_rnd, t_agg = engine.metrics.predictions[r]
+        rows.append(dict(
+            trigger=max(0.0, t_rnd - t_agg),
+            completion=t - engine.round_start,
+            latency=engine.metrics.round_latencies[r],
+            container_seconds=cs - state["cs"],
+            t_rnd_pred=t_rnd, t_agg_pred=t_agg,
+        ))
+        state["cs"] = cs
+
+    engine.on_round_complete = on_done
+    engine.start()
+    sim.run()
+    return rows, engine.metrics
+
+
+EXACT = dict(rel=1e-9, abs=1e-9)  # FP round-off only, far below any w_u
+
+
+@pytest.mark.parametrize("n,rounds,seed,t_pair", [
+    (1, 2, 0, 0.08),
+    (4, 5, 3, 0.08),
+    (8, 4, 11, 0.02),
+])
+def test_fixed_jit_replay_matches_pre_refactor_timeline(n, rounds, seed,
+                                                        t_pair):
+    """The tentpole lock: the engine-driven fixed-JIT replay reproduces the
+    old closed-form records — trigger, completion, latency and
+    container-seconds per round, predictions included."""
+    cc = ClusterConfig()
+    spec = make_spec(n, rounds)
+    measured = gen_measured(spec, seed=seed)
+    want = pre_refactor_timeline(make_spec(n, rounds), measured, cc,
+                                 AggregationEstimator(t_pair))
+    got, metrics = replay_fixed_with_records(
+        make_spec(n, rounds), measured, cc, AggregationEstimator(t_pair))
+    assert len(got) == len(want) == rounds
+    for g, w in zip(got, want):
+        for key in ("trigger", "completion", "latency", "container_seconds",
+                    "t_rnd_pred", "t_agg_pred"):
+            assert g[key] == pytest.approx(w[key], **EXACT), key
+    assert metrics.container_seconds == pytest.approx(
+        sum(w["container_seconds"] for w in want), **EXACT)
+    # one deploy per round under the deterministic timeline
+    assert metrics.jit_deploys == rounds
+
+
+def test_fixed_jit_replay_golden_values():
+    """Hard numbers (captured from the pre-refactor formula) so a change to
+    BOTH the replay and the in-test reference cannot slip through."""
+    spec = make_spec(4, 3, job_id="golden")
+    m = spec.model_bytes
+    measured = [
+        {pid: (p.epoch_time_s * (1.0 + 0.01 * r),
+               m / p.bw_down + m / p.bw_up)
+         for pid, p in spec.parties.items()}
+        for r in range(3)
+    ]
+    got = replay_measured(spec, measured, FIXED_JIT_POLICY,
+                          cluster_config=ClusterConfig(),
+                          estimator=AggregationEstimator(0.08))
+    assert got.round_latencies == pytest.approx(
+        [0.3264455679999969, 0.16322278399999846, 0.16322278399999846],
+        **EXACT)
+    assert got.container_seconds == pytest.approx(2.116445568000003, **EXACT)
+    assert got.predictions[0] == pytest.approx(
+        (25.67108864, 0.193554432), **EXACT)
+    # §5.5 lateness (completion − predicted round end), unified definition
+    assert got.round_lateness == pytest.approx(
+        [0.3264455679999969, 0.41322278399999846, 0.6632227839999985],
+        **EXACT)
+
+
+# --------------------------------------------------------------------------
+# every registered strategy prices the same measured run
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_every_strategy_replays_measured_arrivals(strategy):
+    spec = make_spec(4, 3)
+    measured = gen_measured(spec, seed=5)
+    m = replay_measured(spec, measured,
+                        PolicyConfig(strategy=strategy, batch_trigger=2),
+                        estimator=AggregationEstimator(0.05))
+    assert m.strategy == strategy
+    assert m.rounds_done == 3
+    assert m.updates_received == 4 * 3
+    assert len(m.round_latencies) == 3
+    assert all(lat >= 0.0 for lat in m.round_latencies)
+    assert m.container_seconds > 0.0
+    assert m.finished_at is not None
+
+
+def test_eager_ao_costs_at_least_jit_on_same_arrivals():
+    """§6 headline on measured arrivals: an always-on aggregator bills the
+    whole round (including training time); JIT bills only the drain."""
+    spec = make_spec(4, 4)
+    measured = gen_measured(spec, seed=9)
+    est = lambda: AggregationEstimator(0.05)
+    jit_fixed = replay_measured(spec, measured, FIXED_JIT_POLICY,
+                                estimator=est())
+    jit_sim = replay_measured(spec, measured, PolicyConfig(strategy="jit"),
+                              estimator=est())
+    ao = replay_measured(spec, measured, "eager_ao", estimator=est())
+    assert ao.container_seconds >= jit_fixed.container_seconds
+    assert ao.container_seconds >= jit_sim.container_seconds
+
+
+def test_replay_rejects_missing_rounds():
+    spec = make_spec(2, 2)
+    src = MeasuredArrivals([{"p0": (1.0, 0.1), "p1": (2.0, 0.1)}])
+    src.start_round(0)
+    assert src.sample_arrival("p0") == pytest.approx(1.1)
+    assert src.sample_train_time("p0", 1.1) == 1.0
+    with pytest.raises(IndexError, match="no measured arrivals"):
+        src.start_round(1)
+    with pytest.raises(ValueError, match="at least one round"):
+        replay_measured(spec, [], "jit")
+
+
+def test_replay_policy_coercion_and_estimator_isolation():
+    """On the replay vehicle the bare name "jit" means the fixed timeline
+    (same as the default), an explicit PolicyConfig stays orderstat, and a
+    caller-supplied estimator is never mutated by online calibration."""
+    spec = make_spec(3, 3)
+    measured = gen_measured(spec, seed=1)
+    est = AggregationEstimator(0.05)
+    by_name = replay_measured(spec, measured, "jit", estimator=est)
+    assert est.t_pair_s == 0.05  # calibration stayed inside the replay
+    by_default = replay_measured(spec, measured, None, estimator=est)
+    by_fixed = replay_measured(spec, measured, FIXED_JIT_POLICY,
+                               estimator=est)
+    assert by_name.round_latencies == by_default.round_latencies \
+        == by_fixed.round_latencies
+    assert by_name.container_seconds == by_default.container_seconds \
+        == by_fixed.container_seconds
+    orderstat = replay_measured(spec, measured, PolicyConfig(strategy="jit"),
+                                estimator=est)
+    assert (orderstat.container_seconds != by_fixed.container_seconds
+            or orderstat.round_latencies != by_fixed.round_latencies)
+
+
+# --------------------------------------------------------------------------
+# property tests (skipped gracefully when hypothesis is not installed)
+# --------------------------------------------------------------------------
+def _spec_from_trains(trains, job_id="prop"):
+    parties = {
+        f"p{i}": PartySpec(f"p{i}", epoch_time_s=float(t), dataset_size=100,
+                           batch_size=8)
+        for i, t in enumerate(trains)
+    }
+    return FLJobSpec(job_id=job_id, model_arch="x", model_bytes=10 << 20,
+                     rounds=1, parties=parties)
+
+
+_trains = st.lists(
+    st.floats(min_value=0.5, max_value=120.0,
+              allow_nan=False, allow_infinity=False),
+    min_size=1, max_size=5,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(trains=_trains, rounds=st.integers(1, 3), strat=st.integers(0, 4))
+def test_replay_is_deterministic(trains, rounds, strat):
+    """Replaying the same measured arrival sequence twice gives identical
+    metrics — the arrival source has no hidden state across runs."""
+    strategy = list(STRATEGIES)[strat]
+    spec = _spec_from_trains(trains)
+    spec.rounds = rounds
+    measured = [
+        {f"p{i}": (t * (1.0 + 0.01 * r), 0.25)
+         for i, t in enumerate(trains)}
+        for r in range(rounds)
+    ]
+    policy = PolicyConfig(strategy=strategy, batch_trigger=2)
+    a = replay_measured(spec, measured, policy,
+                        estimator=AggregationEstimator(0.05))
+    b = replay_measured(spec, measured, policy,
+                        estimator=AggregationEstimator(0.05))
+    assert a.round_latencies == b.round_latencies
+    assert a.container_seconds == b.container_seconds
+    assert a.n_deploys == b.n_deploys
+    assert a.predictions == b.predictions
+
+
+@settings(max_examples=25, deadline=None)
+@given(trains=st.lists(
+    st.floats(min_value=0.5, max_value=120.0,
+              allow_nan=False, allow_infinity=False),
+    min_size=2, max_size=5), strat=st.integers(0, 4), seed=st.integers(0, 99))
+def test_replay_invariant_to_party_iteration_order(trains, strat, seed):
+    """Metrics depend on the multiset of arrivals, not on dict insertion
+    order of the parties — per-party predictor state is independent."""
+    strategy = list(STRATEGIES)[strat]
+    perm = np.random.default_rng(seed).permutation(len(trains))
+
+    def run(order):
+        parties = {
+            f"p{i}": PartySpec(f"p{i}", epoch_time_s=float(trains[i]),
+                               dataset_size=100, batch_size=8)
+            for i in order
+        }
+        spec = FLJobSpec(job_id="perm", model_arch="x",
+                         model_bytes=10 << 20, rounds=2, parties=parties)
+        measured = [
+            {f"p{i}": (float(trains[i]) * (1.0 + 0.02 * r), 0.25)
+             for i in order}
+            for r in range(2)
+        ]
+        return replay_measured(spec, measured,
+                               PolicyConfig(strategy=strategy,
+                                            batch_trigger=2),
+                               estimator=AggregationEstimator(0.05))
+
+    a = run(range(len(trains)))
+    b = run(perm)
+    assert a.round_latencies == b.round_latencies
+    assert a.container_seconds == b.container_seconds
+    assert a.n_deploys == b.n_deploys
+
+
+# --------------------------------------------------------------------------
+# the full real-training plumbing (slow: runs actual JAX training)
+# --------------------------------------------------------------------------
+def _tiny_cfg():
+    from repro import configs
+
+    configs.load_all()
+    return configs.get_config("qwen3-0.6b").reduced(
+        num_layers=2, d_model=64, vocab_size=128)
+
+
+def _tiny_spec(cfg, rounds=2, n=2, job_id="rt"):
+    from repro.models import model as M
+
+    return FLJobSpec(
+        job_id=job_id, model_arch=cfg.name, model_bytes=M.n_params(cfg) * 4,
+        aggregation_algorithm="fedavg", rounds=rounds, lr=0.05, batch_size=8,
+        parties={f"p{i}": PartySpec(f"p{i}") for i in range(n)},
+    )
+
+
+@pytest.mark.slow
+def test_fljob_runtime_records_match_pre_refactor_formula():
+    """End-to-end lock: a real training run's records under the default
+    policy equal the pre-refactor closed form applied to its own measured
+    arrivals (same predictor/estimator feedback loop)."""
+    from repro.fl.job import FLJobRuntime
+
+    cfg = _tiny_cfg()
+    rt = FLJobRuntime(cfg, _tiny_spec(cfg, rounds=3, n=3), n_sequences=48,
+                      heterogeneous=True, seed=0, eval_sequences=16)
+    recs = rt.run(verbose=False)
+    want = pre_refactor_timeline(
+        rt.spec, rt.measured_rounds, rt.cluster_cfg,
+        AggregationEstimator(rt.t_pair0))
+    assert len(recs) == len(want) == 3
+    for rec, w in zip(recs, want):
+        assert rec.trigger == pytest.approx(w["trigger"], **EXACT)
+        assert rec.completion == pytest.approx(w["completion"], **EXACT)
+        assert rec.latency == pytest.approx(w["latency"], **EXACT)
+        assert rec.container_seconds == pytest.approx(
+            w["container_seconds"], **EXACT)
+        assert rec.t_rnd_pred == pytest.approx(w["t_rnd_pred"], **EXACT)
+        assert rec.t_agg_pred == pytest.approx(w["t_agg_pred"], **EXACT)
+    m = rt.metrics()
+    assert m.strategy == "jit"
+    assert m.container_seconds == pytest.approx(
+        sum(w["container_seconds"] for w in want), **EXACT)
+    assert m.jit_deploys == m.n_deploys == 3
+
+
+@pytest.mark.slow
+def test_platform_explicit_estimator_reaches_train():
+    """A Platform built with an explicit estimator prices vehicle 3 with a
+    COPY of it (no kernel re-measurement, no calibration leak-back)."""
+    from repro.api import Platform
+
+    cfg = _tiny_cfg()
+    est = AggregationEstimator(0.07)
+    platform = Platform(estimator=est)
+    result = platform.train(cfg, _tiny_spec(cfg, rounds=1, job_id="est"),
+                            n_sequences=16, seed=0, eval_sequences=16)
+    assert result.runtime.t_pair0 == 0.07
+    assert est.t_pair_s == 0.07  # fixed-JIT calibration stayed in the copy
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", list(STRATEGIES))
+def test_platform_train_prices_any_strategy(strategy):
+    """Platform.train(job, policy=<every registered name>) runs real
+    training and returns populated JobMetrics."""
+    from repro.api import Platform
+
+    cfg = _tiny_cfg()
+    result = Platform().train(
+        cfg, _tiny_spec(cfg, rounds=2, n=2, job_id=f"rt-{strategy}"),
+        policy=PolicyConfig(strategy=strategy, batch_trigger=2),
+        n_sequences=32, seed=0, eval_sequences=16,
+    )
+    m = result.metrics
+    assert m.strategy == strategy
+    assert m.rounds_done == 2
+    assert len(m.round_latencies) == 2
+    assert all(lat >= 0.0 for lat in m.round_latencies)
+    assert m.container_seconds > 0.0
+    assert len(result.records) == 2
+    assert all(r.container_seconds >= 0.0 for r in result.records)
+    assert result.runtime.measured_rounds and len(
+        result.runtime.measured_rounds) == 2

@@ -211,6 +211,19 @@ def test_platform_scheduled_vehicle():
                             priority_policy="fifo")
 
 
+def test_partial_run_reports_billed_container_seconds():
+    """run(until=...) mid-job must still report what the cluster billed,
+    matching the scheduler vehicle's live accounting."""
+    platform = Platform(t_pair_s=0.05)
+    job = make_job(rounds=50, job_id="partial")
+    platform.submit(job, "batched")
+    m = platform.run(until=2000.0)[job.job_id]
+    assert 0 < m.rounds_done < 50
+    assert m.container_seconds == platform.cluster.container_seconds_by_job[
+        job.job_id] > 0.0
+    assert m.cost_usd > 0.0
+
+
 def test_platform_is_single_shot():
     platform = Platform()
     platform.submit(make_job(rounds=1), "lazy")

@@ -70,6 +70,13 @@ def main() -> None:
 
         multijob.main()
 
+    if only in (None, "fleet"):
+        _section("fleet: trace-driven multi-job savings (Fig. 9 headline)")
+        from benchmarks import fleet
+
+        print(fleet.HEADER)
+        fleet.run(full="--full" in sys.argv)
+
     if only in (None, "hierarchical"):
         _section("hierarchical edge->cloud JIT aggregation (beyond-paper)")
         from benchmarks import hierarchical

@@ -20,6 +20,12 @@ facade:
     platform.submit_scheduled(job_b)
     metrics = platform.run()                      # -> {job_id: JobMetrics}
 
+    # 2b. fleet-scale trace-driven simulation with per-job simulated
+    #     parties (arrival-gated scheduler rounds, §6.2 latency observed)
+    runner = platform.submit_fleet(synthetic_fleet(16), strategy="jit")
+    platform.run()
+    rollup = runner.result().fleet                # -> FleetMetrics
+
     # 3. real-JAX federated training (parties + Pallas fusion kernels),
     #    priced under ANY registered strategy via the measured-arrival replay
     result = platform.train(model_cfg, job)             # -> TrainingResult
@@ -78,6 +84,8 @@ class Platform:
         self.estimator = estimator or AggregationEstimator(t_pair_s)
         self.engines: Dict[str, RoundEngine] = {}
         self._scheduler: Optional[JITScheduler] = None
+        self._fleets: List[Any] = []  # List[repro.fleet.FleetRunner]
+        self._fleet_job_ids: set = set()
         self._ran = False
 
     # ---- vehicle 1: per-job simulation engines -----------------------------
@@ -157,6 +165,49 @@ class Platform:
         self._check_new(job.job_id)
         return self.scheduler(**scheduler_kw).upon_arrival(job)
 
+    # ---- vehicle 2b: trace-driven fleet with simulated parties -------------
+    def submit_fleet(
+        self,
+        trace,
+        strategy="jit",
+        *,
+        seed: int = 0,
+        round_gap_s: float = 1.0,
+        priority_policy: str = "deadline",
+    ):
+        """Queue a ``repro.fleet.WorkloadTrace`` on this platform's cluster;
+        returns the ``FleetRunner`` (read ``runner.result()`` after
+        ``run()``).
+
+        ``strategy="jit"`` drives the Fig. 6 multi-job scheduler in
+        arrival-gated mode — per-job simulated parties deliver update
+        events, the predictor calibrates t_rnd online from them, and the
+        scheduler vehicle observes true §6.2 aggregation latency. Any other
+        registered strategy name (or an explicit ``PolicyConfig``) runs the
+        per-job engine baselines (eager-AO, eager-λ, ...) over the SAME
+        arrival sequences for paired comparisons. Jobs are submitted at
+        their trace ``submit_s`` times once ``run()`` starts the clock.
+        """
+        from repro.fleet.fleet import FleetRunner  # deferred: repro.fleet
+
+        if self._ran:
+            raise RuntimeError(
+                "Platform.run() already called; build a new Platform "
+                "(simulated clusters are single-shot)")
+        # job ids must be unique across ALL vehicles sharing this cluster:
+        # a collision would silently merge per-job billing and overwrite
+        # metrics rows (compare strategies on fresh Platforms instead)
+        for jt in trace.jobs:
+            self._check_new(jt.job_id)
+        runner = FleetRunner(
+            self.sim, self.cluster, self.estimator, trace,
+            strategy=strategy, seed=seed, round_gap_s=round_gap_s,
+            priority_policy=priority_policy,
+        )
+        self._fleets.append(runner)
+        self._fleet_job_ids.update(jt.job_id for jt in trace.jobs)
+        return runner
+
     # ---- run ---------------------------------------------------------------
     def run(self, until: Optional[float] = None) -> Dict[str, JobMetrics]:
         """Start everything submitted, run the clock, return metrics by job."""
@@ -177,34 +228,13 @@ class Platform:
         out: Dict[str, JobMetrics] = {}
         price = self.cluster_config.price_per_container_s
         for job_id, engine in self.engines.items():
-            m = engine.metrics
-            m.n_deploys = self.cluster.n_deploys_by_job.get(job_id, 0)
-            # read billing live so runs stopped early with run(until=...)
-            # report what the cluster actually billed (identical to the
-            # engine's own value once the job completes)
-            m.container_seconds = self.cluster.container_seconds_by_job.get(
-                job_id, 0.0)
-            m.cost_usd = m.container_seconds * price
-            out[job_id] = m
+            out[job_id] = engine.billed_metrics(price)
         if self._scheduler is not None:
-            for job_id, st in self._scheduler.jobs.items():
-                out[job_id] = self._scheduler_metrics(job_id, st, price)
+            for st in self._scheduler.jobs.values():
+                out[st.job.job_id] = st.to_metrics(self.cluster, price)
+        for runner in self._fleets:
+            out.update(runner.metrics())
         return out
-
-    def _scheduler_metrics(self, job_id: str, st: JobState,
-                           price: float) -> JobMetrics:
-        m = JobMetrics(job_id, "jit-scheduled")
-        m.rounds_done = st.done_rounds
-        # SLA lateness (completion − predicted round end) per round; kept
-        # separate from round_latencies, whose §6.2 semantics (completion −
-        # last arrival) the scheduler vehicle does not observe
-        m.round_lateness = list(st.lateness)
-        m.container_seconds = self.cluster.container_seconds_by_job.get(
-            job_id, 0.0)
-        m.cost_usd = m.container_seconds * price
-        m.n_deploys = self.cluster.n_deploys_by_job.get(job_id, 0)
-        m.finished_at = st.finished_at  # this job's last aggregation
-        return m
 
     # ---- vehicle 3: real-JAX federated training ----------------------------
     def train(
@@ -256,7 +286,7 @@ class Platform:
             raise RuntimeError(
                 "Platform.run() already called; build a new Platform "
                 "(simulated clusters are single-shot)")
-        if job_id in self.engines or (
+        if job_id in self.engines or job_id in self._fleet_job_ids or (
             self._scheduler is not None and job_id in self._scheduler.jobs
         ):
             raise ValueError(f"job {job_id!r} already submitted")

@@ -21,8 +21,10 @@ from repro.core.events import Simulator  # noqa: F401
 from repro.core.cluster import Cluster, ClusterConfig  # noqa: F401
 from repro.core.jobspec import FLJobSpec, PartySpec  # noqa: F401
 from repro.core.metrics import (  # noqa: F401
+    FleetMetrics,
     JobMetrics,
     aggregation_latency,
+    fleet_rollup,
     savings,
     sla_lateness,
 )

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.events import EventHandle, Simulator
 
@@ -60,7 +60,10 @@ class Cluster:
         self.n_deploys: int = 0
         self.n_deploys_by_job: Dict[str, int] = {}
         self.n_preemptions: int = 0
-        self.busy_until: float = 0.0
+        # container occupancy deltas (t, ±1) — covers pooled tasks plus any
+        # always-on / streaming containers that register via note_container;
+        # repro.fleet bins these into a cluster-utilization timeline
+        self.occupancy_events: List[Tuple[float, int]] = []
         self._tick_scheduled = False
 
     # ---- public API --------------------------------------------------------
@@ -91,6 +94,10 @@ class Cluster:
         self.n_deploys_by_job[job_id] = (
             self.n_deploys_by_job.get(job_id, 0) + 1
         )
+
+    def note_container(self, t: float, delta: int) -> None:
+        """Record a container coming up (+1) or going down (-1) at time t."""
+        self.occupancy_events.append((t, delta))
 
     # ---- scheduling tick (every delta seconds while work exists) -----------
     def _ensure_tick(self) -> None:
@@ -127,6 +134,7 @@ class Cluster:
         task.container_id = cid
         task.started_at = self.sim.now
         self.record_deploy(task.job_id)
+        self.note_container(self.sim.now, +1)
         startup = self.cfg.deploy_overhead_s + self.cfg.state_load_s
         task._work_started = self.sim.now + startup
         self.running[task.task_id] = task
@@ -143,11 +151,11 @@ class Cluster:
 
     def _finish(self, task: Task) -> None:
         # checkpoint result to stable storage, then release the container
-        end = self.sim.now + self.cfg.checkpoint_s
         self.running.pop(task.task_id, None)
 
         def complete():
             self._bill(task, self.sim.now)
+            self.note_container(self.sim.now, -1)
             task.on_complete(self.sim.now)
             self._ensure_tick()
 
@@ -157,12 +165,16 @@ class Cluster:
         assert task._finish_evt is not None
         task._finish_evt.cancel()
         self.n_preemptions += 1
-        done = max(0.0, self.sim.now - (task._work_started or self.sim.now))
+        # NB: _work_started == 0.0 is a valid start time, not "unset"
+        ws = (task._work_started if task._work_started is not None
+              else self.sim.now)
+        done = max(0.0, self.sim.now - ws)
         task.work_s = max(0.0, task.work_s - done)
         self.running.pop(task.task_id, None)
         # checkpoint the partially-aggregated state (§5.5), bill, requeue
         end = self.sim.now + self.cfg.checkpoint_s
         self._bill(task, end)
+        self.note_container(end, -1)
         task.started_at = None
         task.container_id = None
         self.sim.schedule_at(end, lambda: self._requeue(task))
@@ -182,6 +194,7 @@ class AlwaysOnContainer:
         self.start_t = cluster.sim.now
         self.busy_until = cluster.sim.now
         self.work_done = 0.0
+        cluster.note_container(self.start_t, +1)
 
     def process(self, work_s: float, on_complete: Callable[[float], None]):
         start = max(self.cluster.sim.now, self.busy_until)
@@ -193,6 +206,7 @@ class AlwaysOnContainer:
 
     def shutdown(self) -> float:
         dur = self.cluster.sim.now - self.start_t
+        self.cluster.note_container(self.cluster.sim.now, -1)
         self.cluster.container_seconds += dur
         self.cluster.container_seconds_by_job[self.job_id] = (
             self.cluster.container_seconds_by_job.get(self.job_id, 0.0) + dur

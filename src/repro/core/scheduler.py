@@ -10,17 +10,35 @@ deadline, the cluster may opportunistically run the aggregator early when it
 has idle capacity (scheduling decisions every delta seconds); if
 higher-priority work arrives, running aggregators are preempted and their
 partially-aggregated state checkpointed to the message queue (§5.5).
+
+Two driving modes per job:
+
+  estimate-driven (default) — the round's aggregation task is submitted at
+  START_ROUND with work sized from the estimator; no party events exist,
+  so the scheduler observes only §5.5 lateness.
+
+  arrival-gated (``upon_arrival(job, gated=True)``, the ``repro.fleet``
+  vehicle) — simulated parties deliver per-round update arrivals via
+  ``deliver_update``; aggregation work is submitted only once the quorum
+  has actually arrived (or the Fig. 6 deadline timer fires), the predictor
+  is calibrated online from every arrival, and completion is timed against
+  the round's true last arrival, so the scheduler vehicle finally observes
+  §6.2 aggregation latency (``core.metrics.aggregation_latency``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import Cluster, Task
 from repro.core.estimator import AggregationEstimator
 from repro.core.events import EventHandle, Simulator
 from repro.core.jobspec import FLJobSpec
-from repro.core.metrics import sla_lateness
+from repro.core.metrics import (
+    JobMetrics,
+    aggregation_latency,
+    sla_lateness,
+)
 from repro.core.prediction import UpdatePredictor
 from repro.core.queue import MessageQueue
 
@@ -40,6 +58,45 @@ class JobState:
     # SLA lateness per round: completion − (round_start + t_rnd)
     lateness: List[float] = dataclasses.field(default_factory=list)
     finished_at: Optional[float] = None  # this job's last aggregation time
+    # (t_rnd, t_agg) predictions per round (what the timer defended)
+    predictions: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
+    # ---- arrival-gated mode (repro.fleet: simulated per-job parties) ----
+    gated: bool = False
+    deadline: float = 0.0  # absolute force-trigger time of this round
+    armed: bool = False  # deadline timer fired (force-trigger mode)
+    expected: int = 0  # arrivals still possible this round (minus no-shows)
+    arrived: int = 0  # updates arrived this round
+    submitted: int = 0  # updates covered by submitted drain tasks
+    aggregated: int = 0  # updates fused this round
+    last_arrival: Optional[float] = None
+    first_drain_t: Optional[float] = None  # first drain submission time
+    updates_received: int = 0  # job-lifetime arrivals
+    no_shows: int = 0  # job-lifetime dropouts
+    quorum_failures: int = 0  # rounds that closed below quorum
+    # §6.2 aggregation latency per round: completion − last actual arrival
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def to_metrics(self, cluster: Cluster, price: float) -> "JobMetrics":
+        """This job's scheduler-vehicle JobMetrics, billing read live from
+        the cluster (the one builder for Platform and FleetRunner).
+
+        §6.2 ``round_latencies`` are populated only by arrival-gated jobs;
+        estimate-driven jobs observe §5.5 ``round_lateness`` alone."""
+        m = JobMetrics(self.job.job_id, "jit-scheduled")
+        m.rounds_done = self.done_rounds
+        m.round_latencies = list(self.latencies)
+        m.round_lateness = list(self.lateness)
+        m.predictions = list(self.predictions)
+        m.updates_received = self.updates_received
+        m.dropped_updates = self.no_shows
+        m.quorum_failures = self.quorum_failures
+        m.container_seconds = cluster.container_seconds_by_job.get(
+            self.job.job_id, 0.0)
+        m.cost_usd = m.container_seconds * price
+        m.n_deploys = cluster.n_deploys_by_job.get(self.job.job_id, 0)
+        m.finished_at = self.finished_at  # this job's last aggregation
+        return m
 
 
 class JITScheduler:
@@ -61,6 +118,7 @@ class JITScheduler:
         priority_policy: str = "deadline",  # "deadline" (§5.5) | "fifo"
         auto_restart: bool = False,
         round_gap_s: float = 1.0,
+        on_round_start: Optional[Callable[[str, int], None]] = None,
     ):
         assert priority_policy in ("deadline", "fifo"), priority_policy
         self.sim = sim
@@ -72,11 +130,12 @@ class JITScheduler:
         self.priority_policy = priority_policy
         self.auto_restart = auto_restart
         self.round_gap_s = round_gap_s
+        self.on_round_start = on_round_start  # (job_id, round_idx)
 
     # ---- Fig. 6 line 1: upon ARRIVAL -----------------------------------------
-    def upon_arrival(self, job: FLJobSpec) -> JobState:
+    def upon_arrival(self, job: FLJobSpec, *, gated: bool = False) -> JobState:
         job.validate()
-        st = JobState(job=job, predictor=UpdatePredictor(job))
+        st = JobState(job=job, predictor=UpdatePredictor(job), gated=gated)
         st.t_rnd = st.predictor.t_rnd()  # lines 6-11
         st.t_agg = self.est.t_agg(job)  # line 13
         self.jobs[job.job_id] = st  # line 12 (FLJOBS[J])
@@ -90,40 +149,73 @@ class JITScheduler:
         # refresh estimates from the predictor's online observations
         st.t_rnd = st.predictor.t_rnd()
         st.t_agg = self.est.t_agg(st.job)
+        st.predictions.append((st.t_rnd, st.t_agg))
         defer = max(0.0, st.t_rnd - st.t_agg)
-        deadline = st.round_start + defer  # line 17 (absolute deadline)
-        # §5.5 sets priority == deadline (earliest-deadline-first under
-        # contention); the "fifo" baseline orders by submission time only
-        priority = deadline if self.priority_policy == "deadline" \
-            else st.round_start
-        st.task = self.cluster.submit(
-            job_id,
-            priority=priority,
-            work_s=self._round_work(st),
-            on_complete=lambda t, j=job_id: self._aggregated(j, t),
-            preemptible=True,
-        )
+        st.deadline = st.round_start + defer  # line 17 (absolute deadline)
+        if st.gated:
+            # arrival-gated round: nothing is queued yet, so no task is
+            # submitted — drains are triggered by deliver_update / the timer
+            st.armed = False
+            st.expected = st.job.n_parties
+            st.arrived = st.submitted = st.aggregated = 0
+            st.last_arrival = None
+            st.first_drain_t = None
+            st.task = None
+        else:
+            st.task = self.cluster.submit(
+                job_id,
+                priority=self._priority(st),
+                work_s=self._round_work(st),
+                on_complete=lambda t, j=job_id: self._aggregated(j, t),
+                preemptible=True,
+            )
         st.timer = self.sim.schedule_at(
-            deadline, lambda j=job_id: self.timer_alert(j)
+            st.deadline, lambda j=job_id: self.timer_alert(j)
         )  # line 18
+        if self.on_round_start:
+            self.on_round_start(job_id, st.round_idx)
 
     # ---- Fig. 6 line 19: upon TIMER_ALERT ----------------------------------------
     def timer_alert(self, job_id: str) -> None:
         st = self.jobs.get(job_id)
-        if st is None or st.task is None or st.executing:
+        if st is None:
+            return
+        if st.gated:
+            st.armed = True
+            st.timer = None
+            if st.task is not None:
+                # a drain is queued/running: force it to the front (line 21)
+                self.cluster.boost(st.task, float("-inf"))
+            else:
+                # work-conserving §5.5: with no quorum queued yet this is a
+                # no-op; the next deliver_update re-checks the (now armed)
+                # trigger, so no delta polling is needed
+                self._maybe_drain(st)
+            return
+        if st.task is None or st.executing:
             return
         # force trigger: boost to highest priority so the next tick starts it
         self.cluster.boost(st.task, float("-inf"))  # line 21
 
     # ---- internals ------------------------------------------------------------
-    def _round_work(self, st: JobState) -> float:
+    def _priority(self, st: JobState) -> float:
+        # §5.5 sets priority == deadline (earliest-deadline-first under
+        # contention); the "fifo" baseline orders by submission time only
+        return st.deadline if self.priority_policy == "deadline" \
+            else st.round_start
+
+    def _unit_work(self, st: JobState) -> float:
         from repro.core.estimator import usable_cores
 
         res = self.est.resources
-        w_u = self.est.t_pair_s / (
+        return self.est.t_pair_s / (
             usable_cores(res, st.job.model_bytes) * res.n_aggregators
         )
-        return st.job.quorum * w_u + st.job.model_bytes / res.intra_dc_bw
+
+    def _round_work(self, st: JobState) -> float:
+        res = self.est.resources
+        return (st.job.quorum * self._unit_work(st)
+                + st.job.model_bytes / res.intra_dc_bw)
 
     def _aggregated(self, job_id: str, t: float) -> None:
         st = self.jobs[job_id]
@@ -133,16 +225,114 @@ class JITScheduler:
         observed = t - st.round_start - max(0.0, st.t_rnd - st.t_agg)
         self.est.calibrate(max(observed, 1e-6), st.job, st.job.quorum)
         st.lateness.append(sla_lateness(t, st.round_start, st.t_rnd))
+        self._round_complete(st, t)
+
+    def _round_complete(self, st: JobState, t: float) -> None:
         st.finished_at = t
         st.done_rounds += 1
         st.round_idx += 1
         if self.on_aggregated:
-            self.on_aggregated(job_id, st.round_idx - 1, t)
+            self.on_aggregated(st.job.job_id, st.round_idx - 1, t)
         if self.auto_restart and st.done_rounds < st.job.rounds:
             self.sim.schedule(self.round_gap_s,
-                              lambda j=job_id: self.start_round(j))
+                              lambda j=st.job.job_id: self.start_round(j))
 
     # ---- feedback from parties ---------------------------------------------------
     def observe_update(self, job_id: str, party_id: str,
                        train_time_s: float) -> None:
         self.jobs[job_id].predictor.observe_round(party_id, train_time_s)
+
+    # ---- arrival-gated rounds (simulated per-job parties, repro.fleet) -----------
+    def deliver_update(self, job_id: str, party_id: str,
+                       train_time_s: float) -> None:
+        """A simulated party's update arrived NOW: calibrate the predictor
+        (online t_upd/t_rnd learning) and gate this round's drain on it."""
+        self.observe_update(job_id, party_id, train_time_s)
+        st = self.jobs[job_id]
+        if not st.gated:
+            return
+        st.arrived += 1
+        st.updates_received += 1
+        st.last_arrival = self.sim.now
+        self._maybe_drain(st)
+
+    def party_no_show(self, job_id: str) -> None:
+        """A party drops out this round (§2.2): one fewer arrival to wait
+        for. With every remaining arrival already fused, the round ends."""
+        st = self.jobs[job_id]
+        assert st.gated, "no-show reporting is an arrival-gated-mode event"
+        st.expected -= 1
+        st.no_shows += 1
+        if st.arrived >= st.expected:
+            if st.arrived == 0 and st.expected <= 0:
+                # the entire round dropped out: a failed round (§5.1)
+                st.quorum_failures += 1
+                if st.timer:
+                    st.timer.cancel()
+                self._round_complete(st, self.sim.now)
+                return
+            if st.task is None and st.aggregated >= st.arrived:
+                self._finish_gated_round(st)
+            else:
+                self._maybe_drain(st)
+
+    def _maybe_drain(self, st: JobState) -> bool:
+        """Submit a drain task for the queued updates when the round is
+        triggerable: every possible arrival is in, or the deadline passed
+        with at least a quorum queued. Returns True when work was queued."""
+        if st.task is not None:
+            return False  # one drain in flight at a time
+        backlog = st.arrived - st.submitted
+        if backlog <= 0:
+            return False
+        all_in = st.arrived >= st.expected
+        quorum = min(st.job.quorum, max(st.expected, 1))
+        if not (all_in or (st.armed and st.arrived >= quorum)):
+            return False
+        work = backlog * self._unit_work(st)
+        if st.first_drain_t is None:
+            st.first_drain_t = self.sim.now
+            # the fused-model broadcast is paid once per round (§5.4 comm)
+            work += st.job.model_bytes / self.est.resources.intra_dc_bw
+        st.submitted += backlog
+        st.task = self.cluster.submit(
+            st.job.job_id,
+            priority=float("-inf") if st.armed else self._priority(st),
+            work_s=work,
+            on_complete=lambda t, k=backlog, j=st.job.job_id:
+                self._drained(j, k, t),
+            preemptible=True,
+        )
+        return True
+
+    def _drained(self, job_id: str, k: int, t: float) -> None:
+        st = self.jobs[job_id]
+        st.aggregated += k
+        st.task = None
+        if st.arrived > st.submitted:
+            # tail updates landed while the drain ran: fuse them too
+            self._maybe_drain(st)
+            return
+        if st.arrived < st.expected:
+            return  # more arrivals coming; the next delivery re-triggers
+        self._finish_gated_round(st)
+
+    def _finish_gated_round(self, st: JobState) -> None:
+        t = self.sim.now
+        if st.timer:
+            st.timer.cancel()
+        if st.expected < st.job.quorum:
+            st.quorum_failures += 1  # round closed below quorum (§5.1)
+        # §5.4 online calibration from the observed aggregation duration:
+        # completion − max(first drain, last arrival), so tail-arrival gaps
+        # between drains do not inflate the t_agg estimate
+        if st.first_drain_t is not None and st.aggregated > 0:
+            begun = max(st.first_drain_t,
+                        st.last_arrival if st.last_arrival is not None
+                        else st.first_drain_t)
+            self.est.calibrate(max(t - begun, 1e-6), st.job, st.aggregated)
+        # the two per-round timeline metrics, shared definitions
+        if st.last_arrival is not None:
+            st.latencies.append(aggregation_latency(t, st.last_arrival))
+        st.lateness.append(sla_lateness(t, st.round_start, st.t_rnd))
+        self._round_complete(st, t)

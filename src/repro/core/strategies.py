@@ -406,6 +406,7 @@ class RoundEngine:
         if self.round_deploy_t is None:
             self.round_deploy_t = self.sim.now
         self.cluster.record_deploy(self.job.job_id)
+        self.cluster.note_container(self.sim.now, +1)
         self.metrics.jit_deploys += 1
         self.stream_start_t = self.sim.now
         self.stream_busy_until = self.sim.now + self.oh_startup
@@ -428,6 +429,7 @@ class RoundEngine:
         end = self.sim.now + self.cluster.cfg.checkpoint_s
         start = self.stream_start_t if self.stream_start_t is not None else end
         dur = end - start
+        self.cluster.note_container(end, -1)
         self.cluster.container_seconds += dur
         self.cluster.container_seconds_by_job[self.job.job_id] = (
             self.cluster.container_seconds_by_job.get(self.job.job_id, 0.0) + dur
@@ -521,6 +523,18 @@ class RoundEngine:
             cont()
         else:
             self._release_pending = True
+
+    def billed_metrics(self, price: float) -> JobMetrics:
+        """This job's metrics with billing read live from the cluster, so
+        runs stopped early report what was actually billed (identical to
+        the engine's own value once the job completes). The one builder
+        for ``Platform.metrics`` and ``FleetRunner.metrics``."""
+        m = self.metrics
+        m.n_deploys = self.cluster.n_deploys_by_job.get(self.job.job_id, 0)
+        m.container_seconds = self.cluster.container_seconds_by_job.get(
+            self.job.job_id, 0.0)
+        m.cost_usd = m.container_seconds * price
+        return m
 
     def _job_done(self):
         self.impl.on_job_end()

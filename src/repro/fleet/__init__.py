@@ -1,0 +1,30 @@
+"""``repro.fleet`` — trace-driven multi-job workload simulation.
+
+  traces   — WorkloadTrace/JobTrace/PartyPattern model (JSON-lines),
+             synthetic fleet generators, measured-run exporters
+  parties  — SimulatedParty availability processes + engine adapter
+  fleet    — FleetRunner: a trace over one shared cluster, per-job
+             JobMetrics + fleet-level rollups
+
+Entry point: ``repro.api.Platform.submit_fleet(trace, strategy=...)``.
+"""
+from repro.fleet.fleet import FleetResult, FleetRunner  # noqa: F401
+from repro.fleet.parties import (  # noqa: F401
+    FleetArrivalSource,
+    MeasuredParty,
+    SimulatedParty,
+    build_parties,
+)
+from repro.fleet.traces import (  # noqa: F401
+    JOB_MIX,
+    MIXED_PATTERNS,
+    PATTERNS,
+    JobClass,
+    JobTrace,
+    PartyPattern,
+    WorkloadTrace,
+    fleet_from_measured,
+    make_pattern,
+    synthetic_fleet,
+    trace_from_measured,
+)

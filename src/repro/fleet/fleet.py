@@ -1,0 +1,183 @@
+"""``FleetRunner`` — drive a ``WorkloadTrace`` over one shared cluster.
+
+One runner wires a fleet trace onto the platform's simulator/cluster/
+estimator and runs every job to completion under ONE deployment strategy:
+
+  * ``strategy="jit"`` — the Fig. 6 multi-job ``JITScheduler`` in
+    arrival-gated mode: per-job ``SimulatedParty`` processes deliver update
+    arrivals into ``deliver_update`` (online t_rnd calibration), drains are
+    gated on actual quorum arrival, and each round's completion is timed
+    against its true last arrival — the scheduler vehicle's §6.2
+    ``aggregation_latency``, previously unobservable.
+  * any other registered strategy name or ``PolicyConfig`` — one
+    ``RoundEngine`` per job on the same shared cluster, driven by the same
+    party processes through ``FleetArrivalSource``, so eager-AO / eager-λ /
+    batched / lazy baselines price identical arrival sequences.
+
+Entry point: ``Platform.submit_fleet(trace, strategy=...)`` then
+``platform.run()``; ``runner.result()`` returns per-job ``JobMetrics``
+plus the fleet-level rollup (``core.metrics.fleet_rollup``): total
+container-seconds and cost, pooled p50/p95 latency and lateness,
+preemption/deploy counts and the cluster-utilization timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set, Union
+
+from repro.core.cluster import Cluster
+from repro.core.estimator import AggregationEstimator
+from repro.core.events import Simulator
+from repro.core.jobspec import FLJobSpec
+from repro.core.metrics import FleetMetrics, JobMetrics, fleet_rollup
+from repro.core.policy import PolicyConfig, as_policy, get_strategy
+from repro.core.scheduler import JITScheduler
+from repro.core.strategies import RoundEngine
+from repro.fleet.parties import FleetArrivalSource, build_parties
+from repro.fleet.traces import JobTrace, WorkloadTrace
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-job metrics + the fleet-level rollup of one fleet run."""
+
+    jobs: Dict[str, JobMetrics]
+    fleet: FleetMetrics
+
+
+class FleetRunner:
+    """Runs one ``WorkloadTrace`` under one deployment strategy."""
+
+    def __init__(
+        self,
+        sim: Simulator,
+        cluster: Cluster,
+        estimator: AggregationEstimator,
+        trace: WorkloadTrace,
+        *,
+        strategy: Union[str, PolicyConfig] = "jit",
+        seed: int = 0,
+        round_gap_s: float = 1.0,
+        priority_policy: str = "deadline",
+    ):
+        self.sim = sim
+        self.cluster = cluster
+        self.est = estimator
+        self.trace = trace
+        self.seed = seed
+        # the scheduler vehicle handles the bare name "jit"; anything else
+        # (including an explicit PolicyConfig, even strategy="jit") runs on
+        # per-job RoundEngines over the same cluster
+        self.use_scheduler = strategy == "jit"
+        self.policy = None if self.use_scheduler else as_policy(strategy)
+        if self.policy is not None:
+            get_strategy(self.policy.strategy)  # fail fast on unknown names
+        self.strategy_name = "jit" if self.use_scheduler \
+            else self.policy.strategy
+        self.scheduler: Optional[JITScheduler] = None
+        if self.use_scheduler:
+            self.scheduler = JITScheduler(
+                sim, cluster, estimator,
+                priority_policy=priority_policy,
+                auto_restart=True,
+                round_gap_s=round_gap_s,
+                on_round_start=self._on_sched_round_start,
+                on_aggregated=self._on_sched_aggregated,
+            )
+        self.specs: Dict[str, FLJobSpec] = {}
+        self.parties: Dict[str, Dict[str, object]] = {}
+        self.engines: Dict[str, RoundEngine] = {}
+        self.completed: Set[str] = set()
+        # validate the WHOLE trace before scheduling anything: a partial
+        # schedule followed by a raise would leave phantom jobs billing
+        # the shared cluster
+        seen = set()
+        for jt in trace.jobs:
+            if jt.job_id in seen:
+                raise ValueError(
+                    f"duplicate job id {jt.job_id!r} in trace {trace.name!r}")
+            seen.add(jt.job_id)
+        for jt in trace.jobs:
+            self.sim.schedule_at(
+                jt.submit_s, lambda jt=jt: self._submit(jt))
+
+    @property
+    def all_done(self) -> bool:
+        return self.completed == set(self.specs) and (
+            len(self.specs) == self.trace.n_jobs)
+
+    # ---- job submission ----------------------------------------------------
+    def _submit(self, jt: JobTrace) -> None:
+        spec = jt.to_jobspec()
+        self.specs[spec.job_id] = spec
+        self.parties[spec.job_id] = build_parties(jt, self.seed)
+        if self.use_scheduler:
+            self.scheduler.upon_arrival(spec, gated=True)
+            self.scheduler.start_round(spec.job_id)
+            return
+        # MeasuredParty processes replay measured jobs through the same
+        # source adapter the synthetic parties use
+        engine = RoundEngine(
+            self.sim, self.cluster, spec, self.est, self.policy,
+            arrival_model=FleetArrivalSource(
+                self.sim, self.parties[spec.job_id]),
+            on_job_done=lambda j=spec.job_id: self.completed.add(j),
+        )
+        self.engines[spec.job_id] = engine
+        engine.start()
+
+    # ---- scheduler-vehicle hooks -------------------------------------------
+    def _on_sched_round_start(self, job_id: str, round_idx: int) -> None:
+        """A gated round began: sample every party's availability, schedule
+        the arrivals as simulator events, report the no-shows."""
+        sched = self.scheduler
+        arrivals = []
+        no_shows = 0
+        for pid, party in self.parties[job_id].items():
+            rec = party.sample_round(round_idx, self.sim.now)
+            if rec is None:
+                no_shows += 1
+            else:
+                arrivals.append((pid, rec))
+        for pid, (train, comm) in arrivals:
+            self.sim.schedule(
+                train + comm,
+                lambda j=job_id, p=pid, t=train: sched.deliver_update(j, p, t))
+        for _ in range(no_shows):
+            sched.party_no_show(job_id)
+
+    def _on_sched_aggregated(self, job_id: str, round_idx: int,
+                             t: float) -> None:
+        if round_idx + 1 >= self.specs[job_id].rounds:
+            self.completed.add(job_id)
+
+    # ---- metrics -----------------------------------------------------------
+    def metrics(self) -> Dict[str, JobMetrics]:
+        """Per-job §6.2 metrics (billing read live from the cluster), via
+        the same builders the ``Platform`` vehicles use
+        (``JobState.to_metrics`` / ``RoundEngine.billed_metrics``)."""
+        price = self.cluster.cfg.price_per_container_s
+        out: Dict[str, JobMetrics] = {}
+        for job_id in self.specs:
+            if self.use_scheduler:
+                out[job_id] = self.scheduler.jobs[job_id].to_metrics(
+                    self.cluster, price)
+            else:
+                out[job_id] = self.engines[job_id].billed_metrics(price)
+        return out
+
+    def result(self, *, timeline_bins: int = 50) -> FleetResult:
+        """Per-job metrics + fleet rollup. The rollup's preemption count,
+        utilization and timeline are cluster-wide — run one fleet per
+        Platform for clean numbers."""
+        jobs = self.metrics()
+        fleet = fleet_rollup(
+            jobs,
+            capacity=self.cluster.cfg.capacity,
+            makespan_s=self.sim.now,
+            n_preemptions=self.cluster.n_preemptions,
+            occupancy_events=self.cluster.occupancy_events,
+            price_per_container_s=self.cluster.cfg.price_per_container_s,
+            timeline_bins=timeline_bins,
+        )
+        return FleetResult(jobs=jobs, fleet=fleet)

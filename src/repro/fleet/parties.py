@@ -1,0 +1,125 @@
+"""Simulated per-job parties (``repro.fleet``).
+
+A ``SimulatedParty`` is the event process behind one party of one fleet
+job: each round it samples its availability pattern (train time, comm
+time, or a no-show) from its own deterministic RNG stream. The same party
+objects drive BOTH execution vehicles:
+
+  * the Fig. 6 ``JITScheduler`` in arrival-gated mode — ``FleetRunner``
+    schedules one simulator event per sampled arrival, which lands in
+    ``JITScheduler.deliver_update`` (online t_rnd calibration + quorum
+    gating) or ``party_no_show``;
+  * the per-job ``RoundEngine`` baselines (eager-AO, eager-λ, ...) — via
+    the ``FleetArrivalSource`` adapter, which plugs the parties into the
+    engine's ``ArrivalSource`` seam.
+
+Because each party owns one RNG stream sampled once per round in a fixed
+order, every strategy prices the *same* arrival sequence — the comparison
+is paired, not merely distribution-matched. ``MeasuredParty`` replays a
+recorded real run (``JobTrace.measured_rounds``) through the same
+interface.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.events import Simulator
+from repro.core.strategies import ArrivalSource
+from repro.fleet.traces import JobTrace, MeasuredRound, PartyPattern
+
+
+class SimulatedParty:
+    """One party's per-round availability process (pattern + RNG stream)."""
+
+    def __init__(self, party_id: str, pattern: PartyPattern, seed):
+        self.party_id = party_id
+        self.pattern = pattern
+        self.rng = np.random.default_rng(seed)
+
+    def sample_round(self, round_idx: int, round_start_s: float
+                     ) -> Optional[Tuple[float, float]]:
+        """(train_s, comm_s) for this round, or None on a no-show (§2.2)."""
+        p = self.pattern
+        if p.dropout_prob and self.rng.uniform() < p.dropout_prob:
+            return None
+        if p.pattern == "intermittent":
+            # the paper's §4.3 random-update scheme: the update lands at a
+            # uniformly random time inside the round window
+            offset = float(self.rng.uniform(p.comm_s, p.window_s))
+            return offset - p.comm_s, p.comm_s
+        t = p.mean_train_s * (
+            1.0 + float(self.rng.normal(0.0, p.jitter_rel)))
+        if p.pattern == "diurnal":
+            # phase advances on the NOMINAL round cadence (round_idx x mean
+            # train time), not the realized round start: realized starts
+            # differ across strategies, which would break the paired-
+            # comparison guarantee for diurnal jobs
+            t_nom = round_idx * p.mean_train_s + p.phase_s
+            t *= 1.0 + p.amplitude * math.sin(
+                2.0 * math.pi * t_nom / p.period_s)
+        if p.pattern == "straggler" and (
+                self.rng.uniform() < p.straggler_prob):
+            t *= p.straggler_factor
+        return max(t, 1e-3), p.comm_s
+
+
+class MeasuredParty:
+    """Replays one party's recorded (train_s, comm_s) per round exactly."""
+
+    def __init__(self, party_id: str, rounds: List[MeasuredRound]):
+        self.party_id = party_id
+        self._rounds = rounds
+
+    def sample_round(self, round_idx: int, round_start_s: float
+                     ) -> Optional[Tuple[float, float]]:
+        if round_idx >= len(self._rounds):
+            raise IndexError(
+                f"no measured round {round_idx} for {self.party_id} "
+                f"(have {len(self._rounds)})")
+        return self._rounds[round_idx].get(self.party_id)
+
+
+def build_parties(job: JobTrace, base_seed: int = 0) -> Dict[str, object]:
+    """One party process per trace party, with deterministic RNG streams
+    derived from (base_seed, job.seed, party index)."""
+    if job.measured_rounds:
+        return {
+            pid: MeasuredParty(pid, job.measured_rounds)
+            for pid in job.party_ids
+        }
+    return {
+        pid: SimulatedParty(pid, pat, seed=(base_seed, job.seed, i))
+        for i, (pid, pat) in enumerate(job.parties.items())
+    }
+
+
+class FleetArrivalSource(ArrivalSource):
+    """Adapter: a job's simulated parties as a ``RoundEngine`` arrival
+    source, so every registered deployment strategy prices the same fleet
+    arrival sequences the JIT scheduler vehicle sees."""
+
+    def __init__(self, sim: Simulator, parties: Dict[str, object]):
+        self.sim = sim
+        self.parties = parties
+        self._idx = 0
+        self._start = 0.0
+        self._cur: Dict[str, Tuple[float, float]] = {}
+
+    def start_round(self, round_idx: int) -> None:
+        self._idx = round_idx
+        self._start = self.sim.now
+        self._cur = {}
+
+    def sample_arrival(self, pid: str) -> Optional[float]:
+        rec = self.parties[pid].sample_round(self._idx, self._start)
+        if rec is None:
+            return None
+        self._cur[pid] = rec
+        train, comm = rec
+        return train + comm
+
+    def sample_train_time(self, pid: str, arrival_offset: float) -> float:
+        return self._cur[pid][0]

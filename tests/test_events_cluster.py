@@ -77,6 +77,73 @@ def test_preemption_checkpoints_and_resumes():
     assert cl.container_seconds_by_job["low"] > 40.0
 
 
+def test_preemption_work_remaining_after_checkpoint():
+    """A preempted task's remaining work_s is exactly the original minus
+    the work actually executed (startup time is not work)."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=1, deploy_overhead_s=2.0, state_load_s=1.0,
+                        checkpoint_s=1.0, delta_s=0.1)
+    cl = Cluster(sim, cfg)
+    low = cl.submit("low", priority=100.0, work_s=50.0,
+                    on_complete=lambda t: None)
+    # work starts at t=3 (after 2s deploy + 1s load); preempt at t=13
+    sim.schedule(13.0, lambda: cl.submit(
+        "high", priority=0.0, work_s=5.0, on_complete=lambda t: None,
+    ))
+    sim.run(until=13.5)
+    assert cl.n_preemptions == 1
+    assert low.work_s == pytest.approx(40.0)  # 10s of 50 executed
+    assert low.started_at is None and low.container_id is None
+    # the evicted segment billed its full container lifetime incl. the
+    # checkpoint: 13 (alive) + 1 (checkpoint)
+    assert cl.container_seconds_by_job["low"] == pytest.approx(14.0)
+
+
+def test_repeated_evictions_keep_accounting_consistent():
+    """n_preemptions, per-segment billing and remaining work stay
+    consistent when the same task is evicted again and again."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=1, deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=1.0, delta_s=0.1)
+    cl = Cluster(sim, cfg)
+    done = []
+    low = cl.submit("low", priority=100.0, work_s=30.0,
+                    on_complete=lambda t: done.append(("low", t)))
+    # three high-priority bursts, spaced so "low" restarts between them
+    for t in [10.0, 30.0, 40.0]:
+        sim.schedule(t, lambda: cl.submit(
+            "high", priority=0.0, work_s=5.0,
+            on_complete=lambda tt: done.append(("high", tt)),
+        ))
+    remaining = []
+    for t in [10.5, 30.5, 40.5]:
+        sim.schedule(t, lambda: remaining.append(low.work_s))
+    sim.run()
+    assert cl.n_preemptions == 3
+    # each eviction checkpointed the partial aggregate and shrank the
+    # remaining work strictly, never below zero and never redone (the
+    # first eviction hits a task whose work started at t=0.0 exactly — a
+    # regression guard for the former work_started-falsy redo-all bug)
+    assert remaining[0] == pytest.approx(20.0)  # 10 of 30 executed
+    assert remaining == sorted(remaining, reverse=True)
+    assert all(0.0 <= w < 30.0 for w in remaining)
+    assert [j for j, _ in done] == ["high", "high", "high", "low"]
+    # "low" executed 30s of work total across 4 segments; with 3 extra
+    # checkpoint+requeue cycles (and delta-tick slack) its completion
+    # lands just after the last burst drains — far below a redo-all run
+    assert 45.0 < done[-1][1] < 50.0
+    # billing: every container-second of every segment is accounted per
+    # job, and the cluster-wide total is the per-job sum
+    assert cl.container_seconds == pytest.approx(
+        cl.container_seconds_by_job["low"]
+        + cl.container_seconds_by_job["high"])
+    # low is billed at least its work + 4 checkpoints (3 evictions + final)
+    assert cl.container_seconds_by_job["low"] >= 30.0 + 4 * cfg.checkpoint_s
+    assert cl.container_seconds_by_job["high"] == pytest.approx(3 * 6.0)
+    # occupancy bookkeeping closed every container it opened
+    assert sum(d for _, d in cl.occupancy_events) == 0
+
+
 def test_always_on_container_bills_lifetime():
     sim = Simulator()
     cl = Cluster(sim, ClusterConfig())

@@ -16,39 +16,70 @@ by tests/test_fleet.py).
 what CI runs per-PR; the emitted BENCH_fleet.json seeds the performance
 trajectory (one artifact per run).
 
-Caveat: in the scheduler vehicle parties announce per-round no-shows up
-front (a presence signal), while the engine baselines only discover them
-at the §4.3 window close — latency/makespan columns for dropout-heavy
-patterns therefore favor the JIT rows; container-seconds, the headline
-metric, bill actual occupancy either way.
+Presence parity: parties announce per-round no-shows up front (§2.2) to
+BOTH vehicles — the scheduler hears ``party_no_show``, the engine
+baselines ``RoundEngine.announce_no_show`` via ``FleetArrivalSource`` —
+so latency/makespan columns are apples-to-apples under dropout-heavy
+patterns (see the conformance harness, ``repro.fleet.conformance``).
 
-CSV: strategy,n_jobs,pattern,rounds,makespan_s,container_seconds,cost_usd,
-     p50_latency_s,p95_latency_s,p50_lateness_s,p95_lateness_s,
-     preemptions,deploys,utilization,savings_vs_ao_pct
+Scenario matrix: besides concurrent-job count x pattern, the sweep
+stresses capacity (tiny 2-container clusters -> preemption-heavy traces)
+and horizon (long diurnal traces spanning many availability periods).
+NB the utilization column is container-seconds / (pool capacity x
+makespan) and deliberately EXCEEDS 1.0 for always-on rows on the tiny
+tier: dedicated AO containers live outside the pooled capacity, so
+>100% reads "this fleet demands more containers than the pool has"
+(see core.metrics.FleetMetrics).
+``--full`` runs the whole matrix; the default grid samples it; ``--smoke``
+(CI per-PR) runs the golden 16-job cell plus one tiny-cluster stress cell.
+
+CSV: strategy,n_jobs,pattern,capacity,horizon_rounds,rounds,makespan_s,
+     container_seconds,cost_usd,p50_latency_s,p95_latency_s,
+     p50_lateness_s,p95_lateness_s,preemptions,deploys,utilization,
+     savings_vs_ao_pct
 """
 from __future__ import annotations
 
 import argparse
 import json
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.api import Platform
 from repro.core import AggregationEstimator, ClusterConfig
 from repro.fleet import synthetic_fleet
+from repro.fleet.conformance import CAPACITY_TIERS, TIER_T_PAIR_S
 
 STRATEGIES: Tuple[str, ...] = ("jit", "eager_ao", "eager_serverless")
 PATTERNS_SWEPT: Tuple[str, ...] = ("mixed", "steady", "intermittent",
                                    "dropout")
 
-HEADER = ("strategy,n_jobs,pattern,rounds,makespan_s,container_seconds,"
-          "cost_usd,p50_latency_s,p95_latency_s,p50_lateness_s,"
-          "p95_lateness_s,preemptions,deploys,utilization,"
-          "savings_vs_ao_pct")
+# The capacity tiers are DEFINED by the conformance harness (the matrix
+# that defends them) and imported here so the benchmark rows can never
+# drift from the cells the harness checks. The stress tier models an
+# UNDER-PROVISIONED pool: few containers AND slow fuse cores
+# (multi-second drains), so aggregation tasks actually contend, queue
+# behind each other and get preempted by earlier-deadline drains. With
+# the default t_pair the pool never binds — drains are shorter than the
+# scheduling tick, so capacity 2 behaves like capacity 8.
+DEFAULT_CAPACITY = CAPACITY_TIERS["default"]
+TINY_CAPACITY = CAPACITY_TIERS["tiny"]
+STRESS_T_PAIR_S = TIER_T_PAIR_S["tiny"]
+LONG_HORIZON_ROUNDS = 24  # long-horizon (multi-day diurnal) traces
+
+HEADER = ("strategy,n_jobs,pattern,capacity,horizon_rounds,rounds,"
+          "makespan_s,container_seconds,cost_usd,p50_latency_s,"
+          "p95_latency_s,p50_lateness_s,p95_lateness_s,preemptions,"
+          "deploys,utilization,savings_vs_ao_pct")
 
 
 def simulate(n_jobs: int, pattern: str, strategy: str, *, seed: int = 0,
-             capacity: int = 8, t_pair_s: float = 0.05) -> Dict:
-    trace = synthetic_fleet(n_jobs, pattern, seed=seed)
+             capacity: Optional[int] = None,
+             horizon_rounds: Optional[int] = None,
+             t_pair_s: float = 0.05) -> Dict:
+    trace = synthetic_fleet(n_jobs, pattern, seed=seed,
+                            cluster_capacity=capacity,
+                            horizon_rounds=horizon_rounds)
+    capacity = trace.cluster_capacity or DEFAULT_CAPACITY
     platform = Platform(
         ClusterConfig(capacity=capacity),
         AggregationEstimator(t_pair_s=t_pair_s),
@@ -61,6 +92,8 @@ def simulate(n_jobs: int, pattern: str, strategy: str, *, seed: int = 0,
         "strategy": strategy,
         "n_jobs": n_jobs,
         "pattern": pattern,
+        "capacity": capacity,
+        "horizon_rounds": horizon_rounds or 0,
         "rounds": fleet.rounds_done,
         "makespan_s": round(fleet.makespan_s, 1),
         "container_seconds": round(fleet.container_seconds, 1),
@@ -75,16 +108,36 @@ def simulate(n_jobs: int, pattern: str, strategy: str, *, seed: int = 0,
     }
 
 
-def run(smoke: bool = False, full: bool = False) -> List[Dict]:
-    """The sweep grid; --smoke keeps only the default-trace golden cell."""
+def grid_cells(smoke: bool = False, full: bool = False
+               ) -> List[Tuple[int, str, Optional[int], Optional[int]]]:
+    """(n_jobs, pattern, capacity, horizon_rounds) sweep cells."""
     if smoke:
-        grid = [(16, "mixed")]
-    else:
-        counts = [4, 16] + ([32, 64] if full else [32])
-        grid = [(n, p) for n in counts for p in PATTERNS_SWEPT]
+        # the golden default cell + one tiny-cluster capacity-stress sample
+        return [(16, "mixed", None, None),
+                (8, "dropout", TINY_CAPACITY, None)]
+    counts = [4, 16] + ([32, 64] if full else [32])
+    grid = [(n, p, None, None) for n in counts for p in PATTERNS_SWEPT]
+    # capacity-stress tier: the same mixes on a tiny 2-container pool
+    stress = PATTERNS_SWEPT if full else ("mixed", "dropout")
+    grid += [(8, p, TINY_CAPACITY, None) for p in stress]
+    if full:
+        # long-horizon diurnal traces (many availability periods per party)
+        grid += [(8, "diurnal", None, LONG_HORIZON_ROUNDS),
+                 (8, "diurnal", TINY_CAPACITY, LONG_HORIZON_ROUNDS)]
+    return grid
+
+
+def run(smoke: bool = False, full: bool = False) -> List[Dict]:
+    """The sweep grid; --smoke keeps the CI cells (see ``grid_cells``)."""
     rows: List[Dict] = []
-    for n_jobs, pattern in grid:
-        cell = {s: simulate(n_jobs, pattern, s) for s in STRATEGIES}
+    for n_jobs, pattern, capacity, horizon in grid_cells(smoke, full):
+        t_pair = (STRESS_T_PAIR_S if capacity == TINY_CAPACITY
+                  else TIER_T_PAIR_S["default"])
+        cell = {
+            s: simulate(n_jobs, pattern, s, capacity=capacity,
+                        horizon_rounds=horizon, t_pair_s=t_pair)
+            for s in STRATEGIES
+        }
         ao_cs = cell["eager_ao"]["container_seconds"]
         for s in STRATEGIES:
             row = cell[s]
@@ -99,9 +152,11 @@ def run(smoke: bool = False, full: bool = False) -> List[Dict]:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="only the default 16-job mixed trace (CI per-PR)")
+                    help="CI per-PR cells: the golden 16-job mixed trace "
+                         "plus one tiny-cluster capacity-stress sample")
     ap.add_argument("--full", action="store_true",
-                    help="add the 64-job rows (slower)")
+                    help="full matrix: 64-job rows, capacity-stress on all "
+                         "patterns, long-horizon diurnal traces (slower)")
     ap.add_argument("--out", default="BENCH_fleet.json",
                     help="write rows as JSON here ('' to skip)")
     args = ap.parse_args()

@@ -174,10 +174,18 @@ class Platform:
         seed: int = 0,
         round_gap_s: float = 1.0,
         priority_policy: str = "deadline",
+        recorder=None,
     ):
         """Queue a ``repro.fleet.WorkloadTrace`` on this platform's cluster;
         returns the ``FleetRunner`` (read ``runner.result()`` after
         ``run()``).
+
+        ``recorder``, if given, is called once per (job, party, round) with
+        the sampled availability — ``None`` on a §2.2 no-show, else
+        ``(train_s, comm_s)`` — on either vehicle, in per-party round
+        order; the cross-vehicle conformance harness
+        (``repro.fleet.conformance``) uses it to assert that paired runs
+        saw identical arrival sequences.
 
         ``strategy="jit"`` drives the Fig. 6 multi-job scheduler in
         arrival-gated mode — per-job simulated parties deliver update
@@ -202,7 +210,7 @@ class Platform:
         runner = FleetRunner(
             self.sim, self.cluster, self.estimator, trace,
             strategy=strategy, seed=seed, round_gap_s=round_gap_s,
-            priority_policy=priority_policy,
+            priority_policy=priority_policy, recorder=recorder,
         )
         self._fleets.append(runner)
         self._fleet_job_ids.update(jt.job_id for jt in trace.jobs)

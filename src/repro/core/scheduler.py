@@ -71,6 +71,12 @@ class JobState:
     aggregated: int = 0  # updates fused this round
     last_arrival: Optional[float] = None
     first_drain_t: Optional[float] = None  # first drain submission time
+    # when the round's first drain actually began EXECUTING on the pool —
+    # §5.4 calibration measures from here, not from submission, so time
+    # spent queued behind other jobs on a saturated cluster is never
+    # misattributed to t_pair (that feedback loop diverges: queue wait
+    # inflates t_pair, which inflates drain work, which grows the queue)
+    first_drain_exec_t: Optional[float] = None
     updates_received: int = 0  # job-lifetime arrivals
     no_shows: int = 0  # job-lifetime dropouts
     quorum_failures: int = 0  # rounds that closed below quorum
@@ -160,6 +166,7 @@ class JITScheduler:
             st.arrived = st.submitted = st.aggregated = 0
             st.last_arrival = None
             st.first_drain_t = None
+            st.first_drain_exec_t = None
             st.task = None
         else:
             st.task = self.cluster.submit(
@@ -308,6 +315,12 @@ class JITScheduler:
     def _drained(self, job_id: str, k: int, t: float) -> None:
         st = self.jobs[job_id]
         st.aggregated += k
+        if st.first_drain_exec_t is None and st.task is not None \
+                and st.task.started_at is not None:
+            # actual pool start of this round's first drain (post-queueing;
+            # after a preemption this is the restart, which only shortens
+            # the observation — calibration stays conservative)
+            st.first_drain_exec_t = st.task.started_at
         st.task = None
         if st.arrived > st.submitted:
             # tail updates landed while the drain ran: fuse them too
@@ -324,12 +337,17 @@ class JITScheduler:
         if st.expected < st.job.quorum:
             st.quorum_failures += 1  # round closed below quorum (§5.1)
         # §5.4 online calibration from the observed aggregation duration:
-        # completion − max(first drain, last arrival), so tail-arrival gaps
-        # between drains do not inflate the t_agg estimate
-        if st.first_drain_t is not None and st.aggregated > 0:
-            begun = max(st.first_drain_t,
+        # completion − max(first drain EXECUTION start, last arrival), so
+        # neither tail-arrival gaps between drains nor time spent queued
+        # behind other jobs on a saturated pool inflates the t_agg
+        # estimate (queue wait fed back into t_pair diverges: bigger
+        # t_pair -> bigger drain work -> longer queues -> bigger t_pair)
+        begun0 = (st.first_drain_exec_t if st.first_drain_exec_t is not None
+                  else st.first_drain_t)
+        if begun0 is not None and st.aggregated > 0:
+            begun = max(begun0,
                         st.last_arrival if st.last_arrival is not None
-                        else st.first_drain_t)
+                        else begun0)
             self.est.calibrate(max(t - begun, 1e-6), st.job, st.aggregated)
         # the two per-round timeline metrics, shared definitions
         if st.last_arrival is not None:

@@ -101,7 +101,20 @@ class ArrivalSource:
     train/comm times from ``FLJobRuntime``). The engine is agnostic — the
     same strategy plugins price either source, which is what lets one real
     training run be costed under every registered deployment policy.
+
+    ``announces_presence`` declares whether a ``None`` from
+    ``sample_arrival`` is an *up-front* §2.2 no-show announcement (the
+    party declares at round start that it will skip the round, the same
+    knowledge ``JITScheduler.party_no_show`` gives the scheduler vehicle)
+    or a silent dropout the engine only discovers at the §4.3 window
+    close. ``repro.fleet``'s ``FleetArrivalSource`` announces, so engine
+    baselines and the scheduler see the same no-show sequence and
+    dropout-pattern latency comparisons are presence-fair.
     """
+
+    #: True when a None arrival is announced at round start (§2.2 presence
+    #: signal) rather than discovered at the §4.3 window close.
+    announces_presence: bool = False
 
     def start_round(self, round_idx: int) -> None:
         """Called by the engine when round `round_idx` begins."""
@@ -177,9 +190,16 @@ class ArrivalModel(ArrivalSource):
     noise_rel: float = 0.02
     seed: int = 0
     dropout_prob: float = 0.0  # per-round no-show probability (§2.2)
+    # opt-in presence signal: dropouts are announced at round start instead
+    # of being discovered at the §4.3 window close (fleet-parity semantics)
+    announce_dropouts: bool = False
 
     def __post_init__(self):
-        if self.dropout_prob:
+        self.announces_presence = self.announce_dropouts
+        if self.dropout_prob and not self.announce_dropouts:
+            # silent dropouts are only discovered at the window close, so
+            # a window must exist; announced no-shows shrink the round
+            # target at round start and need none
             assert self.job.t_wait_s, \
                 "dropout needs a t_wait window to close rounds (§4.3)"
         self.rng = np.random.default_rng(self.seed)
@@ -301,6 +321,7 @@ class RoundEngine:
         self.processed = 0
         self.arrived = 0
         self.arrived_parties: Set[str] = set()
+        self.no_show_parties: Set[str] = set()  # announced no-shows (§2.2)
         self.task_active = False
         self.last_arrival: Optional[float] = None
         self.round_start = self.sim.now
@@ -310,7 +331,9 @@ class RoundEngine:
         self.stream_busy_until: Optional[float] = None
         self.stream_start_t: Optional[float] = None
         self._close_timer = None
-        self.round_target = self.job.n_parties  # reduced at window close
+        # reduced by announced no-shows and at window close
+        self.round_target = self.job.n_parties
+        self._quorum_noted = False  # below-quorum round counted once
         self.round_deploy_t: Optional[float] = None  # first deploy this round
         self.impl.on_round_reset()
 
@@ -325,6 +348,8 @@ class RoundEngine:
             for pid in self.job.parties:
                 off = self.arrivals.sample_arrival(pid)
                 if off is None:  # party drops out this round (§2.2)
+                    if self.arrivals.announces_presence:
+                        self.announce_no_show(pid)
                     continue
                 self.sim.schedule(
                     off, lambda pid=pid, off=off: self._on_update(pid, off))
@@ -334,6 +359,12 @@ class RoundEngine:
             self._close_timer = self.sim.schedule(
                 float(self.job.t_wait_s), self._close_round_window)
         self.impl.on_round_start()
+        if self.round_target <= 0:
+            # every party announced a no-show: a failed round (§5.1), the
+            # same immediate close the scheduler vehicle's party_no_show
+            # path performs when an entire round drops out
+            self._note_quorum_failure()
+            self._round_complete()
 
     # ---- update arrival --------------------------------------------------------
     def _on_update(self, pid: str, offset: float) -> None:
@@ -351,16 +382,33 @@ class RoundEngine:
     def all_arrived(self) -> bool:
         return self.arrived >= self.round_target
 
+    def announce_no_show(self, pid: str) -> None:
+        """§2.2 presence signal: `pid` declares at round start that it will
+        skip this round — one fewer arrival to wait for, mirroring
+        ``JITScheduler.party_no_show`` so baseline strategies hold the same
+        knowledge as the scheduler vehicle."""
+        self.no_show_parties.add(pid)
+        self.round_target -= 1
+        self.metrics.dropped_updates += 1
+
+    def _note_quorum_failure(self) -> None:
+        """Record this round as below quorum (§5.1), at most once."""
+        if not self._quorum_noted:
+            self._quorum_noted = True
+            self.metrics.quorum_failures += 1
+
     def _close_round_window(self) -> None:
         """t_wait reached: ignore missing parties (§4.3); aggregate what
-        arrived if quorum holds, else record a failed round (§5.1)."""
+        arrived if quorum holds, else record a failed round (§5.1).
+        Announced no-shows already left ``round_target``, so only silent
+        late/absent parties are dropped here."""
         self._close_timer = None
-        missing = self.job.n_parties - self.arrived
+        missing = self.round_target - self.arrived
         if missing <= 0:
             return
         self.metrics.dropped_updates += missing
         if self.arrived < self.job.quorum:
-            self.metrics.quorum_failures += 1
+            self._note_quorum_failure()
             self.round_target = self.arrived  # close with what we have
             if self.arrived == 0:
                 self._round_complete()
@@ -446,7 +494,7 @@ class RoundEngine:
         R = 0.0
         max_tupd = 0.0
         for pid, p in self.job.parties.items():
-            if pid in self.arrived_parties:
+            if pid in self.arrived_parties or pid in self.no_show_parties:
                 continue
             k += 1
             if p.mode == "intermittent":
@@ -475,11 +523,20 @@ class RoundEngine:
 
     def _round_complete(self):
         done = self.impl.finish_round()
-        last = done if self.last_arrival is None else self.last_arrival
-        self.metrics.round_latencies.append(aggregation_latency(done, last))
+        if self.last_arrival is not None:
+            # §6.2 latency is measured from the true last arrival; a round
+            # with zero arrivals contributes none (scheduler-vehicle parity)
+            self.metrics.round_latencies.append(
+                aggregation_latency(done, self.last_arrival))
+        if self.arrived < self.job.quorum:
+            self._note_quorum_failure()
         # §5.5 SLA lateness against this round's prediction, when the
-        # policy produced one (same definition as the scheduler vehicle)
-        if len(self.metrics.predictions) > len(self.metrics.round_lateness):
+        # policy produced one (same definition as the scheduler vehicle);
+        # a zero-arrival (failed) round contributes no sample, like the
+        # scheduler vehicle's all-dropout path — a bogus -t_rnd entry
+        # would pool into the fleet lateness percentiles as "early"
+        if self.arrived > 0 and \
+                len(self.metrics.predictions) > len(self.metrics.round_lateness):
             self.metrics.round_lateness.append(sla_lateness(
                 done, self.round_start, self.metrics.predictions[-1][0]))
         self.metrics.rounds_done += 1

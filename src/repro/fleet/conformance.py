@@ -1,0 +1,323 @@
+"""Cross-vehicle conformance harness: the scenario matrix, defended.
+
+The fleet subsystem prices one ``WorkloadTrace`` on two execution
+vehicles — the arrival-gated Fig. 6 ``JITScheduler`` (``strategy="jit"``)
+and the per-job ``RoundEngine`` baselines (eager-AO, eager-λ, batched,
+lazy). Every paper claim the benchmarks report (§2.2/Fig. 9 savings,
+§4.3 robustness under intermittency and dropouts, §6.2 latency) is a
+*paired* comparison between those vehicles, so the pairing itself must be
+defended: if the vehicles ever drift onto different arrival sequences, or
+the savings/latency invariants quietly stop holding on some corner of the
+(strategy × availability pattern × capacity tier) matrix, the benchmark
+numbers become fiction without any test failing.
+
+``run_cell`` executes one matrix cell: the same synthetic trace through
+every requested strategy (one fresh platform each, scheduler vehicle for
+``"jit"``, engine baselines otherwise), recording every availability
+sample through the ``ArrivalRecorder`` hook. It then checks the paired
+invariants and returns a ``CellReport``:
+
+  1. **arrival parity** — every vehicle sampled the identical per-party
+     ``round -> (train_s, comm_s) | no-show`` sequence (the shared
+     ``SimulatedParty`` RNG streams, §2.2 presence signal included);
+  2. **Fig. 9 savings** — JIT bills at most ``(1 - min_savings_pct/100)``
+     of eager-AO container-seconds on cells where the paper claims the
+     60%+ fleet savings (the default-capacity tiers);
+  3. **§6.2 latency band** — the JIT scheduler's pooled p50/p95
+     aggregation latency exceeds eager-AO's by at most the cell's
+     declared tolerance (the paper's "negligible latency impact" claim,
+     presence-fair under dropout patterns since both vehicles now hear
+     no-shows up front).
+
+Capacity tiers: ``default`` is the benchmark pool (8 containers, fast
+fuse); ``tiny`` is an under-provisioned pool (2 containers, multi-second
+fuse) whose drains genuinely contend, queue and get preempted. The
+``long_horizon_matrix`` cells stretch every job to many diurnal periods
+(multi-day traces) and are meant for the nightly tier.
+
+``tests/test_conformance.py`` locks the full default matrix; run it
+standalone with ``python -m repro.fleet.conformance``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterConfig
+from repro.core.estimator import AggregationEstimator
+from repro.fleet.fleet import FleetResult
+from repro.fleet.traces import WorkloadTrace, synthetic_fleet
+
+#: tier name -> containers in the shared aggregation pool
+CAPACITY_TIERS: Dict[str, int] = {"tiny": 2, "default": 8}
+#: tier name -> fuse cost; the tiny tier pairs few containers with slow
+#: cores so aggregation work actually contends (see benchmarks.fleet)
+TIER_T_PAIR_S: Dict[str, float] = {"tiny": 2.0, "default": 0.05}
+
+#: the availability patterns of the conformance matrix (every single
+#: pattern; "mixed" is a cycle of these and adds no new cell)
+CONFORMANCE_PATTERNS: Tuple[str, ...] = (
+    "steady", "diurnal", "straggler", "intermittent", "dropout")
+
+#: every registered deployment strategy; "jit" runs the scheduler vehicle,
+#: the rest run per-job RoundEngine baselines
+CONFORMANCE_STRATEGIES: Tuple[str, ...] = (
+    "jit", "eager_ao", "eager_serverless", "batched", "lazy")
+
+#: (job_id, party_id) -> availability samples in round order; None is a
+#: §2.2 no-show. Two vehicles conform when these logs are equal.
+ArrivalLog = Dict[Tuple[str, str], List[Optional[Tuple[float, float]]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One (pattern × capacity tier) cell of the scenario matrix, with its
+    declared claims: which savings floor applies and how much extra §6.2
+    latency the JIT vehicle is allowed over the always-on baseline."""
+
+    pattern: str
+    tier: str = "default"
+    n_jobs: int = 5
+    seed: int = 0
+    stagger_s: float = 30.0
+    horizon_rounds: Optional[int] = None
+    # declared claims / tolerance bands
+    min_savings_pct: Optional[float] = 60.0  # None: savings not claimed
+    p50_band_s: float = 30.0  # allowed JIT p50 latency excess over eager-AO
+    p95_band_s: float = 120.0  # ... and p95
+
+    def __post_init__(self):
+        if self.tier not in CAPACITY_TIERS:
+            raise ValueError(
+                f"tier must be one of {sorted(CAPACITY_TIERS)}, "
+                f"got {self.tier!r}")
+
+    @property
+    def capacity(self) -> int:
+        return CAPACITY_TIERS[self.tier]
+
+    @property
+    def t_pair_s(self) -> float:
+        return TIER_T_PAIR_S[self.tier]
+
+    @property
+    def name(self) -> str:
+        h = f"-h{self.horizon_rounds}" if self.horizon_rounds else ""
+        return f"{self.pattern}/{self.tier}{h}"
+
+    def trace(self) -> WorkloadTrace:
+        return synthetic_fleet(
+            self.n_jobs, self.pattern, seed=self.seed,
+            stagger_s=self.stagger_s, cluster_capacity=self.capacity,
+            horizon_rounds=self.horizon_rounds)
+
+
+@dataclasses.dataclass
+class VehicleRun:
+    """One strategy's run of a cell trace on its execution vehicle."""
+
+    strategy: str
+    vehicle: str  # "scheduler" | "engine"
+    arrivals: ArrivalLog
+    result: FleetResult
+
+
+@dataclasses.dataclass
+class CellReport:
+    """One conformance cell: the per-strategy runs and every violated
+    invariant (empty ``failures`` == the cell conforms)."""
+
+    spec: CellSpec
+    runs: Dict[str, VehicleRun]
+    failures: List[str]
+
+    @property
+    def passed(self) -> bool:
+        return not self.failures
+
+    def savings_pct(self) -> Optional[float]:
+        """JIT savings vs eager-AO container-seconds (Fig. 9), if both ran."""
+        jit = self.runs.get("jit")
+        ao = self.runs.get("eager_ao")
+        if jit is None or ao is None:
+            return None
+        ao_cs = ao.result.fleet.container_seconds
+        if ao_cs <= 0.0:
+            return None
+        return 100.0 * (1.0 - jit.result.fleet.container_seconds / ao_cs)
+
+    def summary(self) -> Dict[str, object]:
+        row: Dict[str, object] = {
+            "cell": self.spec.name,
+            "n_jobs": self.spec.n_jobs,
+            "capacity": self.spec.capacity,
+            "passed": self.passed,
+            "savings_vs_ao_pct": (
+                round(self.savings_pct(), 2)
+                if self.savings_pct() is not None else None),
+        }
+        jit = self.runs.get("jit")
+        ao = self.runs.get("eager_ao")
+        if jit is not None and ao is not None:
+            row["jit_p50_latency_s"] = round(
+                jit.result.fleet.p50_latency_s, 3)
+            row["ao_p50_latency_s"] = round(ao.result.fleet.p50_latency_s, 3)
+        if self.failures:
+            row["failures"] = list(self.failures)
+        return row
+
+
+def _first_divergence(a: ArrivalLog, b: ArrivalLog) -> str:
+    """Human-readable location of the first arrival-sequence mismatch."""
+    for key in sorted(set(a) | set(b)):
+        xs, ys = a.get(key), b.get(key)
+        if xs is None or ys is None:
+            return f"party {key} sampled by one vehicle only"
+        if xs != ys:
+            for r, (x, y) in enumerate(zip(xs, ys)):
+                if x != y:
+                    return f"party {key} round {r}: {x!r} != {y!r}"
+            return (f"party {key}: {len(xs)} vs {len(ys)} sampled rounds")
+    return "logs empty"
+
+
+def run_cell(
+    spec: CellSpec,
+    strategies: Tuple[str, ...] = CONFORMANCE_STRATEGIES,
+) -> CellReport:
+    """Run one matrix cell through every strategy's vehicle and check the
+    paired invariants. Each strategy gets a fresh platform (simulated
+    clusters are single-shot) but the identical trace and party seeds."""
+    from repro.api import Platform  # deferred: api imports repro.fleet
+
+    runs: Dict[str, VehicleRun] = {}
+    failures: List[str] = []
+    trace = spec.trace()  # immutable; one build serves every strategy
+    for strategy in strategies:
+        log: ArrivalLog = {}
+
+        def recorder(job_id, pid, round_idx, sample, _log=log):
+            _log.setdefault((job_id, pid), []).append(sample)
+
+        platform = Platform(
+            ClusterConfig(capacity=spec.capacity),
+            AggregationEstimator(t_pair_s=spec.t_pair_s),
+        )
+        runner = platform.submit_fleet(
+            trace, strategy=strategy, recorder=recorder)
+        platform.run()
+        if not runner.all_done:
+            failures.append(f"[{spec.name}] {strategy}: fleet did not run "
+                            f"every job to completion")
+        runs[strategy] = VehicleRun(
+            strategy=strategy,
+            vehicle="scheduler" if strategy == "jit" else "engine",
+            arrivals=log,
+            result=runner.result(),
+        )
+    failures.extend(check_invariants(spec, runs))
+    return CellReport(spec=spec, runs=runs, failures=failures)
+
+
+def check_invariants(spec: CellSpec,
+                     runs: Dict[str, VehicleRun]) -> List[str]:
+    """The three paired invariants of one cell (see module docstring)."""
+    failures: List[str] = []
+    # 1. arrival parity: every vehicle saw the same availability sequences
+    names = list(runs)
+    ref = runs[names[0]]
+    for name in names[1:]:
+        if runs[name].arrivals != ref.arrivals:
+            failures.append(
+                f"[{spec.name}] arrival sequences diverge between "
+                f"{names[0]} and {name}: "
+                f"{_first_divergence(ref.arrivals, runs[name].arrivals)}")
+    # 2. Fig. 9 savings floor, where the cell claims it
+    jit, ao = runs.get("jit"), runs.get("eager_ao")
+    if spec.min_savings_pct is not None and jit and ao:
+        jit_cs = jit.result.fleet.container_seconds
+        ao_cs = ao.result.fleet.container_seconds
+        cap = 1.0 - spec.min_savings_pct / 100.0
+        if not (ao_cs > 0.0 and jit_cs <= cap * ao_cs):
+            failures.append(
+                f"[{spec.name}] JIT bills {jit_cs:.1f} container-seconds "
+                f"vs eager-AO {ao_cs:.1f}; claimed >= "
+                f"{spec.min_savings_pct:.0f}% savings (<= {cap:.2f}x)")
+    # 3. §6.2 latency within the declared band of the always-on baseline
+    if jit and ao:
+        for q, band in [("p50", spec.p50_band_s), ("p95", spec.p95_band_s)]:
+            jl = getattr(jit.result.fleet, f"{q}_latency_s")
+            al = getattr(ao.result.fleet, f"{q}_latency_s")
+            if jl - al > band:
+                failures.append(
+                    f"[{spec.name}] JIT {q} latency {jl:.3f}s exceeds "
+                    f"eager-AO {al:.3f}s by more than the declared "
+                    f"{band:.1f}s band")
+    return failures
+
+
+# --------------------------------------------------------------------------
+# the declared scenario matrix
+# --------------------------------------------------------------------------
+def default_matrix(*, n_jobs: int = 5, seed: int = 0) -> List[CellSpec]:
+    """Every (pattern × {default, tiny}) cell with its declared claims.
+
+    The savings floor is claimed only on default-capacity cells (the
+    paper's Fig. 9 setting); tiny-tier cells still demand arrival parity
+    and a latency band, but under an under-provisioned pool the JIT
+    drains queue behind each other, so the band is wider and no savings
+    floor applies (always-on containers live OUTSIDE the pooled capacity
+    and are never squeezed by it)."""
+    cells: List[CellSpec] = []
+    for pattern in CONFORMANCE_PATTERNS:
+        # bands declared at ~2-3x the deterministic observed excess, so a
+        # regression that doubles JIT latency over the baseline fails the
+        # cell while benign jitter from future estimator tweaks does not
+        cells.append(CellSpec(
+            pattern=pattern, tier="default", n_jobs=n_jobs, seed=seed,
+            min_savings_pct=60.0, p50_band_s=5.0, p95_band_s=15.0))
+        cells.append(CellSpec(
+            pattern=pattern, tier="tiny", n_jobs=n_jobs, seed=seed,
+            min_savings_pct=None, p50_band_s=20.0, p95_band_s=80.0))
+    return cells
+
+
+def long_horizon_matrix(*, n_jobs: int = 6, seed: int = 0,
+                        horizon_rounds: int = 24) -> List[CellSpec]:
+    """Nightly cells: long-horizon diurnal/intermittent traces spanning
+    many availability periods, on both capacity tiers."""
+    cells: List[CellSpec] = []
+    for pattern in ("diurnal", "intermittent", "dropout"):
+        cells.append(CellSpec(
+            pattern=pattern, tier="default", n_jobs=n_jobs, seed=seed,
+            horizon_rounds=horizon_rounds,
+            min_savings_pct=60.0, p50_band_s=30.0, p95_band_s=90.0))
+        cells.append(CellSpec(
+            pattern=pattern, tier="tiny", n_jobs=n_jobs, seed=seed,
+            horizon_rounds=horizon_rounds,
+            min_savings_pct=None, p50_band_s=90.0, p95_band_s=420.0))
+    return cells
+
+
+def run_matrix(cells: Optional[List[CellSpec]] = None,
+               strategies: Tuple[str, ...] = CONFORMANCE_STRATEGIES,
+               ) -> List[CellReport]:
+    return [run_cell(spec, strategies)
+            for spec in (cells if cells is not None else default_matrix())]
+
+
+def main() -> int:
+    reports = run_matrix()
+    bad = 0
+    for rep in reports:
+        print(rep.summary())
+        for f in rep.failures:
+            print("  FAIL:", f)
+            bad += 1
+    print(f"{len(reports)} cells, "
+          f"{sum(1 for r in reports if r.passed)} conforming")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,7 +33,11 @@ from repro.core.metrics import FleetMetrics, JobMetrics, fleet_rollup
 from repro.core.policy import PolicyConfig, as_policy, get_strategy
 from repro.core.scheduler import JITScheduler
 from repro.core.strategies import RoundEngine
-from repro.fleet.parties import FleetArrivalSource, build_parties
+from repro.fleet.parties import (
+    ArrivalRecorder,
+    FleetArrivalSource,
+    build_parties,
+)
 from repro.fleet.traces import JobTrace, WorkloadTrace
 
 
@@ -59,12 +63,16 @@ class FleetRunner:
         seed: int = 0,
         round_gap_s: float = 1.0,
         priority_policy: str = "deadline",
+        recorder: Optional[ArrivalRecorder] = None,
     ):
         self.sim = sim
         self.cluster = cluster
         self.est = estimator
         self.trace = trace
         self.seed = seed
+        # conformance hook: every (job, party, round) availability sample is
+        # reported in the same order on BOTH vehicles (repro.fleet.conformance)
+        self.recorder = recorder
         # the scheduler vehicle handles the bare name "jit"; anything else
         # (including an explicit PolicyConfig, even strategy="jit") runs on
         # per-job RoundEngines over the same cluster
@@ -120,7 +128,8 @@ class FleetRunner:
         engine = RoundEngine(
             self.sim, self.cluster, spec, self.est, self.policy,
             arrival_model=FleetArrivalSource(
-                self.sim, self.parties[spec.job_id]),
+                self.sim, self.parties[spec.job_id],
+                job_id=spec.job_id, recorder=self.recorder),
             on_job_done=lambda j=spec.job_id: self.completed.add(j),
         )
         self.engines[spec.job_id] = engine
@@ -135,6 +144,8 @@ class FleetRunner:
         no_shows = 0
         for pid, party in self.parties[job_id].items():
             rec = party.sample_round(round_idx, self.sim.now)
+            if self.recorder is not None:
+                self.recorder(job_id, pid, round_idx, rec)
             if rec is None:
                 no_shows += 1
             else:

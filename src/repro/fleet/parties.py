@@ -22,13 +22,21 @@ interface.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.events import Simulator
 from repro.core.strategies import ArrivalSource
 from repro.fleet.traces import JobTrace, MeasuredRound, PartyPattern
+
+#: Conformance hook: called once per (job, party, round) with the sampled
+#: availability — ``None`` for a §2.2 no-show, else ``(train_s, comm_s)``.
+#: Both fleet vehicles call it in the same order, so two runs over the same
+#: trace can be checked for identical arrival sequences
+#: (``repro.fleet.conformance``).
+ArrivalRecorder = Callable[[str, str, int, Optional[Tuple[float, float]]],
+                           None]
 
 
 class SimulatedParty:
@@ -99,11 +107,22 @@ def build_parties(job: JobTrace, base_seed: int = 0) -> Dict[str, object]:
 class FleetArrivalSource(ArrivalSource):
     """Adapter: a job's simulated parties as a ``RoundEngine`` arrival
     source, so every registered deployment strategy prices the same fleet
-    arrival sequences the JIT scheduler vehicle sees."""
+    arrival sequences the JIT scheduler vehicle sees.
 
-    def __init__(self, sim: Simulator, parties: Dict[str, object]):
+    Announces presence: a ``None`` sample is reported to the engine as an
+    up-front §2.2 no-show (``RoundEngine.announce_no_show``), the same
+    per-round knowledge ``FleetRunner`` gives the scheduler vehicle via
+    ``party_no_show`` — so dropout-pattern comparisons are presence-fair.
+    """
+
+    announces_presence = True
+
+    def __init__(self, sim: Simulator, parties: Dict[str, object], *,
+                 job_id: str = "", recorder: Optional[ArrivalRecorder] = None):
         self.sim = sim
         self.parties = parties
+        self.job_id = job_id
+        self.recorder = recorder
         self._idx = 0
         self._start = 0.0
         self._cur: Dict[str, Tuple[float, float]] = {}
@@ -115,6 +134,8 @@ class FleetArrivalSource(ArrivalSource):
 
     def sample_arrival(self, pid: str) -> Optional[float]:
         rec = self.parties[pid].sample_round(self._idx, self._start)
+        if self.recorder is not None:
+            self.recorder(self.job_id, pid, self._idx, rec)
         if rec is None:
             return None
         self._cur[pid] = rec

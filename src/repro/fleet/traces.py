@@ -184,26 +184,41 @@ class JobTrace:
 
 @dataclasses.dataclass
 class WorkloadTrace:
-    """An ordered fleet of jobs; JSON-lines serializable and replayable."""
+    """An ordered fleet of jobs; JSON-lines serializable and replayable.
+
+    ``cluster_capacity`` is the capacity tier the trace was generated to
+    stress (containers in the shared aggregation pool); ``None`` means the
+    consumer's default. It rides along in the header line so a saved
+    capacity-stress trace replays on the cluster size it was meant for
+    (``benchmarks.fleet.simulate`` honours it).
+    """
 
     jobs: List[JobTrace] = dataclasses.field(default_factory=list)
     name: str = "fleet"
+    cluster_capacity: Optional[int] = None
+
+    def __post_init__(self):
+        if self.cluster_capacity is not None and self.cluster_capacity < 1:
+            raise ValueError(
+                f"cluster_capacity must be >= 1, got {self.cluster_capacity}")
 
     @property
     def n_jobs(self) -> int:
         return len(self.jobs)
 
     def dumps(self) -> str:
-        lines = [json.dumps(
-            {"kind": "workload-trace", "version": 1, "name": self.name,
-             "n_jobs": self.n_jobs})]
+        head = {"kind": "workload-trace", "version": 1, "name": self.name,
+                "n_jobs": self.n_jobs}
+        if self.cluster_capacity is not None:
+            head["cluster_capacity"] = self.cluster_capacity
+        lines = [json.dumps(head)]
         lines += [json.dumps({"kind": "job", **j.to_dict()}, sort_keys=True)
                   for j in self.jobs]
         return "\n".join(lines) + "\n"
 
     @classmethod
     def loads(cls, text: str) -> "WorkloadTrace":
-        name, jobs = "fleet", []
+        name, jobs, capacity = "fleet", [], None
         for line in text.splitlines():
             line = line.strip()
             if not line:
@@ -212,9 +227,10 @@ class WorkloadTrace:
             kind = d.pop("kind", "job")
             if kind == "workload-trace":
                 name = d.get("name", name)
+                capacity = d.get("cluster_capacity")
                 continue
             jobs.append(JobTrace.from_dict(d))
-        return cls(jobs=jobs, name=name)
+        return cls(jobs=jobs, name=name, cluster_capacity=capacity)
 
     def dump(self, path) -> None:
         with open(path, "w") as f:
@@ -296,10 +312,25 @@ def synthetic_fleet(
     seed: int = 0,
     stagger_s: float = 30.0,
     job_mix: Tuple[JobClass, ...] = JOB_MIX,
+    cluster_capacity: Optional[int] = None,
+    horizon_rounds: Optional[int] = None,
 ) -> WorkloadTrace:
     """The default fleet: ``n_jobs`` jobs cycling through the small/medium/
     large mix, submitted ``stagger_s`` apart, each party following the given
-    availability pattern ("mixed" cycles patterns across jobs)."""
+    availability pattern ("mixed" cycles patterns across jobs).
+
+    Scenario-matrix knobs (capacity-stress and long-horizon sweeps):
+
+      cluster_capacity   the aggregation-pool size the trace should run on,
+                         recorded in the trace header — tiny values (1-2)
+                         produce preemption-heavy contention for the same
+                         job mix
+      horizon_rounds     overrides every job's round count, stretching the
+                         fleet to a long horizon; diurnal parties then span
+                         many availability periods (multi-day traces)
+    """
+    if horizon_rounds is not None and horizon_rounds < 1:
+        raise ValueError(f"horizon_rounds must be >= 1, got {horizon_rounds}")
     rng = np.random.default_rng(seed)
     jobs: List[JobTrace] = []
     for k in range(n_jobs):
@@ -319,14 +350,21 @@ def synthetic_fleet(
         jobs.append(JobTrace(
             job_id=f"{jc.name}{k}",
             model_bytes=jc.model_bytes,
-            rounds=jc.rounds,
+            rounds=horizon_rounds if horizon_rounds is not None
+            else jc.rounds,
             submit_s=k * stagger_s,
             quorum_fraction=0.8 if kind == "dropout" else 1.0,
             window_s=window if needs_window else None,
             seed=seed + k,
             parties=parties,
         ))
-    return WorkloadTrace(jobs=jobs, name=f"synthetic-{pattern}-{n_jobs}")
+    name = f"synthetic-{pattern}-{n_jobs}"
+    if cluster_capacity is not None:
+        name += f"-cap{cluster_capacity}"
+    if horizon_rounds is not None:
+        name += f"-h{horizon_rounds}"
+    return WorkloadTrace(jobs=jobs, name=name,
+                         cluster_capacity=cluster_capacity)
 
 
 # --------------------------------------------------------------------------

@@ -47,6 +47,41 @@ def test_latency_benchmark_golden_cell():
         assert got_p95 == pytest.approx(p95, rel=1e-9, abs=1e-9)
 
 
+def test_fleet_smoke_row_schema_locked():
+    """The per-PR CI artifact (BENCH_fleet.json, benchmarks.fleet --smoke)
+    cannot silently drift shape: every row carries exactly the HEADER
+    columns, in order, with finite values — so the uploaded performance
+    trajectory stays machine-comparable across PRs."""
+    import math
+
+    from benchmarks import fleet as fleet_bench
+
+    rows = fleet_bench.run(smoke=True)
+    want_keys = fleet_bench.HEADER.split(",")
+    # 2 smoke cells (golden 16-job mixed + tiny-cluster stress) x strategies
+    assert len(rows) == 2 * len(fleet_bench.STRATEGIES)
+    for row in rows:
+        assert list(row) == want_keys  # exact keys, exact order
+        for key, val in row.items():
+            if key in ("strategy", "pattern"):
+                assert isinstance(val, str) and val
+            else:
+                assert isinstance(val, (int, float)) and math.isfinite(val), \
+                    (key, val)
+    by_cell = {}
+    for row in rows:
+        by_cell.setdefault((row["n_jobs"], row["pattern"]), {})[
+            row["strategy"]] = row
+    golden = by_cell[(16, "mixed")]
+    stress = by_cell[(8, "dropout")]
+    # the golden cell keeps the paper's fleet-savings claim visible in CI
+    assert golden["jit"]["savings_vs_ao_pct"] >= 60.0
+    assert golden["eager_ao"]["savings_vs_ao_pct"] == 0.0
+    assert golden["jit"]["capacity"] == fleet_bench.DEFAULT_CAPACITY
+    # the stress sample runs on the tiny preemption-heavy tier
+    assert stress["jit"]["capacity"] == fleet_bench.TINY_CAPACITY
+
+
 def test_latency_benchmark_intermittent_smoke():
     """The Fig. 7 (intermittent) path stays runnable and ordered: lazy-ish
     JIT deferral never beats eager latency by construction."""

@@ -243,9 +243,14 @@ def test_fleet_golden_savings_cell():
     ao = simulate(16, "mixed", "eager_ao")
     assert jit["rounds"] == ao["rounds"] == 66
     assert jit["container_seconds"] <= 0.40 * ao["container_seconds"]
-    # golden cell: deterministic paired-RNG trace -> exact numbers
+    # golden cell: deterministic paired-RNG trace -> exact numbers. The
+    # eager-AO number dropped from 37513.3 when baselines learned the §2.2
+    # presence signal: dropout-pattern rounds now close at the last PRESENT
+    # arrival instead of padding to the §4.3 window, so the always-on
+    # containers of the mixed trace's dropout jobs are billed for a
+    # presence-fair (shorter) makespan.
     assert jit["container_seconds"] == pytest.approx(384.6, abs=0.1)
-    assert ao["container_seconds"] == pytest.approx(37513.3, abs=0.1)
+    assert ao["container_seconds"] == pytest.approx(28803.8, abs=0.1)
 
 
 def test_fleet_scheduler_latencies_nonempty_and_rollup_sane():

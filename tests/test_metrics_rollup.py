@@ -1,0 +1,84 @@
+"""Regression locks for ``core.metrics.fleet_rollup`` edge cases: the
+rollup must stay finite and non-raising on degenerate fleets — a single
+latency sample (nearest-rank p95), jobs with zero completed rounds, and
+empty pooled-latency sets — because capacity-stress sweeps legitimately
+produce such cells (e.g. a fleet stopped early on a tiny cluster)."""
+import math
+
+from repro.core.metrics import (
+    JobMetrics,
+    _percentile,
+    fleet_rollup,
+    utilization_timeline,
+)
+
+
+def _finite(x):
+    return isinstance(x, (int, float)) and math.isfinite(x)
+
+
+def test_percentile_single_sample_and_empty():
+    assert _percentile([], 0.95) == 0.0
+    assert _percentile([7.25], 0.95) == 7.25
+    assert _percentile([7.25], 0.50) == 7.25
+
+
+def test_rollup_single_sample_p95():
+    m = JobMetrics("j", "jit")
+    m.round_latencies = [3.5]
+    m.round_lateness = [-0.5]
+    m.rounds_done = 1
+    m.container_seconds = 10.0
+    fleet = fleet_rollup({"j": m}, capacity=8, makespan_s=100.0)
+    assert fleet.p50_latency_s == fleet.p95_latency_s == 3.5
+    assert fleet.p50_lateness_s == fleet.p95_lateness_s == -0.5
+    assert all(_finite(v) for v in fleet.summary().values()
+               if not isinstance(v, str))
+
+
+def test_rollup_zero_round_jobs_and_empty_latency_pool():
+    """Jobs that never completed a round (empty latency/lateness lists)
+    pool into zeros, never NaN, and never raise."""
+    dead = JobMetrics("dead", "jit")  # zero rounds, zero everything
+    fleet = fleet_rollup({"dead": dead}, capacity=8, makespan_s=0.0)
+    assert fleet.rounds_done == 0
+    assert fleet.p50_latency_s == fleet.p95_latency_s == 0.0
+    assert fleet.p50_lateness_s == fleet.p95_lateness_s == 0.0
+    assert fleet.utilization == 0.0  # 0-makespan denominator guarded
+    assert fleet.utilization_timeline == []
+    assert all(_finite(v) for v in fleet.summary().values()
+               if not isinstance(v, str))
+    # a mixed fleet: one dead job pooled with one live one
+    live = JobMetrics("live", "jit")
+    live.round_latencies = [1.0, 2.0]
+    live.round_lateness = [0.0, 0.5]
+    live.rounds_done = 2
+    live.container_seconds = 4.0
+    fleet = fleet_rollup({"dead": dead, "live": live},
+                         capacity=8, makespan_s=50.0)
+    assert fleet.n_jobs == 2
+    assert fleet.rounds_done == 2
+    assert fleet.p95_latency_s == 2.0
+    assert _finite(fleet.utilization)
+
+
+def test_rollup_empty_fleet():
+    fleet = fleet_rollup({}, capacity=8, makespan_s=10.0)
+    assert fleet.n_jobs == 0
+    assert fleet.container_seconds == 0.0
+    assert all(_finite(v) for v in fleet.summary().values()
+               if not isinstance(v, str))
+
+
+def test_utilization_timeline_degenerate_inputs():
+    assert utilization_timeline([], capacity=8, makespan_s=0.0) == []
+    assert utilization_timeline([], capacity=0, makespan_s=10.0) == []
+    assert utilization_timeline([], capacity=8, makespan_s=10.0,
+                                n_bins=0) == []
+    # events at/after the makespan boundary are clamped, not dropped into
+    # an out-of-range bin
+    tl = utilization_timeline([(0.0, 1), (12.0, -1)], capacity=1,
+                              makespan_s=10.0, n_bins=5)
+    assert len(tl) == 5
+    assert all(0.0 <= frac <= 1.0 and _finite(frac) for _, frac in tl)
+    assert tl[-1][1] > 0.0

@@ -109,3 +109,87 @@ def test_deadline_priorities_beat_fifo_under_contention():
     edf = simulate("deadline", capacity=1, n_jobs=12)
     assert edf["p95_lateness_s"] < fifo["p95_lateness_s"]
     assert edf["miss_rate"] <= fifo["miss_rate"]
+
+
+# --------------------------------------------------------------------------
+# party_no_show x quorum-gated drains (arrival-gated mode, repro.fleet)
+# --------------------------------------------------------------------------
+def _gated(n=4, epoch_s=100.0, quorum=1.0):
+    sim, cluster, est, sched, done = setup(capacity=4)
+    job = FLJobSpec(
+        "g", "x", 10 << 20, quorum_fraction=quorum,
+        parties={f"p{i}": PartySpec(f"p{i}", epoch_time_s=epoch_s)
+                 for i in range(n)},
+    )
+    st = sched.upon_arrival(job, gated=True)
+    return sim, cluster, sched, st
+
+
+def test_no_show_makes_quorum_unreachable_round_still_closes():
+    """Fig. 6 / §5.1: two no-shows push the reachable arrivals (2) below
+    the quorum (3). The round must not deadlock waiting for a quorum that
+    can never arrive: it drains what arrived as soon as every remaining
+    party reported, records ONE quorum failure, and accounts each dropped
+    update exactly once."""
+    sim, cluster, sched, st = _gated(quorum=0.75)  # quorum = 3 of 4
+    sched.start_round("g")
+    for t, pid in [(50.0, "p0"), (60.0, "p1")]:
+        sim.schedule_at(t, lambda p=pid, tt=t: sched.deliver_update(
+            "g", p, tt - 1.0))
+    sim.schedule_at(70.0, lambda: sched.party_no_show("g"))
+    sim.schedule_at(75.0, lambda: sched.party_no_show("g"))
+    sim.run()
+    assert st.done_rounds == 1
+    assert st.finished_at > 75.0  # closed by the second no-show's drain
+    assert st.quorum_failures == 1
+    assert st.no_shows == 2
+    assert st.arrived == st.aggregated == 2
+    m = st.to_metrics(cluster, price=1.0)
+    assert m.dropped_updates == 2  # exactly once, not re-counted on drain
+    assert m.quorum_failures == 1
+    # §6.2 latency measured from the true last arrival at t=60
+    assert len(st.latencies) == 1
+    assert st.latencies[0] == pytest.approx(st.finished_at - 60.0)
+
+
+def test_no_show_after_deadline_closes_at_post_deadline_arrival():
+    """No-shows announced up front leave quorum unreachable; the Fig. 6
+    deadline timer fires with one update queued (below the clamped
+    quorum), and the round closes once the last REMAINING party reports
+    after the deadline — one drain, one quorum failure."""
+    sim, cluster, sched, st = _gated(quorum=0.75)  # quorum = 3 of 4
+    sched.start_round("g")
+    deadline = st.deadline
+    assert deadline > 0.0
+    sched.party_no_show("g")
+    sched.party_no_show("g")
+    sim.schedule_at(50.0, lambda: sched.deliver_update("g", "p0", 49.0))
+    late = deadline + 40.0
+    sim.schedule_at(late, lambda: sched.deliver_update(
+        "g", "p1", late - 1.0))
+    sim.run()
+    assert st.done_rounds == 1
+    assert st.finished_at > late  # not closed at the deadline with 1 < 2
+    assert st.no_shows == 2
+    assert st.quorum_failures == 1
+    assert st.to_metrics(cluster, price=1.0).dropped_updates == 2
+    assert st.latencies[0] == pytest.approx(st.finished_at - late)
+
+
+def test_no_show_last_party_closes_without_new_arrivals():
+    """When the final outstanding party drops out AFTER earlier arrivals
+    were already drained, the no-show itself must finish the round (no
+    further deliver_update will ever come)."""
+    sim, cluster, sched, st = _gated(n=3, quorum=1.0)  # quorum = 3 of 3
+    sched.start_round("g")
+    sim.schedule_at(10.0, lambda: sched.deliver_update("g", "p0", 9.0))
+    sim.schedule_at(20.0, lambda: sched.party_no_show("g"))
+    # p0's drain has long finished when the last no-show lands
+    sim.schedule_at(300.0, lambda: sched.party_no_show("g"))
+    sim.run()
+    assert st.done_rounds == 1
+    assert st.finished_at >= 300.0
+    assert st.aggregated == st.arrived == 1
+    assert st.quorum_failures == 1
+    assert st.no_shows == 2
+    assert st.to_metrics(cluster, price=1.0).dropped_updates == 2

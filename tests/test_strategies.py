@@ -223,3 +223,126 @@ def test_quorum_failure_recorded():
     m = run_strategy(job, "jit", t_pair_s=0.05, dropout_prob=0.5, seed=2)
     assert m.rounds_done == 8
     assert m.quorum_failures > 0
+
+
+# --------------------------------------------------------------------------
+# §2.2 presence signal: announced no-shows (engine-level semantics)
+# --------------------------------------------------------------------------
+def _presence_engine(strategy, *, n=3, quorum=1.0, absent=("p2",),
+                     t_wait=1000.0, rounds=2):
+    """A RoundEngine whose arrival source ANNOUNCES that `absent` parties
+    skip every round (fixed 10s arrivals otherwise)."""
+    from repro.core import Simulator
+    from repro.core.cluster import Cluster, ClusterConfig
+    from repro.core.estimator import AggregationEstimator
+    from repro.core.strategies import ArrivalSource, RoundEngine
+
+    class AnnouncedAbsence(ArrivalSource):
+        announces_presence = True
+
+        def sample_arrival(self, pid):
+            return None if pid in absent else 10.0
+
+        def sample_train_time(self, pid, off):
+            return off - 1.0
+
+    job = FLJobSpec(
+        "pres", "x", 1 << 20, rounds=rounds, quorum_fraction=quorum,
+        t_wait_s=t_wait,
+        parties={f"p{i}": PartySpec(f"p{i}", epoch_time_s=10.0)
+                 for i in range(n)},
+    )
+    sim = Simulator()
+    cluster = Cluster(sim, ClusterConfig(capacity=4))
+    engine = RoundEngine(sim, cluster, job, AggregationEstimator(0.05),
+                         strategy, arrival_model=AnnouncedAbsence())
+    return sim, engine
+
+
+def test_announced_no_show_closes_round_before_window():
+    """The engine hears the no-show up front (scheduler parity): the round
+    target shrinks at round start and the round completes right after the
+    present parties' updates — NOT at the t_wait=1000s window close."""
+    for strategy in ["eager_ao", "eager_serverless", "batched", "lazy",
+                     "jit"]:
+        sim, engine = _presence_engine(strategy, quorum=0.5)
+        engine.start()
+        sim.run()
+        m = engine.metrics
+        assert m.rounds_done == 2, strategy
+        assert sim.now < 100.0, (strategy, sim.now)  # << one 1000s window
+        assert m.updates_received == 2 * 2, strategy
+        assert m.dropped_updates == 2, strategy  # one per round, only once
+        assert m.quorum_failures == 0, strategy  # 2 arrivals >= quorum of 1
+        assert len(m.round_latencies) == 2, strategy
+
+
+def test_announced_no_show_below_quorum_counted_once_per_round():
+    """A round whose announced absences leave it below quorum completes
+    early AND records exactly one quorum failure (not re-counted by the
+    window close or the completion path)."""
+    sim, engine = _presence_engine("eager_ao", quorum=1.0)  # quorum = 3
+    engine.start()
+    sim.run()
+    m = engine.metrics
+    assert m.rounds_done == 2
+    assert m.quorum_failures == 2  # one per round, exactly
+    assert m.dropped_updates == 2
+
+
+def test_all_parties_announced_absent_is_failed_round_not_deadlock():
+    """Every party announcing a no-show fails the round immediately (§5.1)
+    and contributes no fake zero latency (nor, under jit, a bogus -t_rnd
+    lateness sample) — parity with the scheduler vehicle's full-dropout
+    path, which records neither."""
+    for strategy in ["eager_ao", "jit"]:
+        sim, engine = _presence_engine(
+            strategy, absent=("p0", "p1", "p2"), quorum=0.5)
+        engine.start()
+        sim.run()
+        m = engine.metrics
+        assert m.rounds_done == 2, strategy
+        assert m.quorum_failures == 2, strategy
+        assert m.dropped_updates == 6, strategy  # 3 parties x 2 rounds
+        assert m.updates_received == 0, strategy
+        assert m.round_latencies == [], strategy  # no §6.2 samples
+        assert m.round_lateness == [], strategy  # no §5.5 samples either
+
+
+def test_silent_dropout_still_discovered_at_window_close():
+    """Default sources do NOT announce: a None arrival stays invisible
+    until t_wait (the paper's §4.3 baseline behavior is preserved)."""
+    job = make_job(n=10, rounds=2)
+    job.t_wait_s = 600.0
+    m = run_strategy(job, "eager_ao", t_pair_s=0.05, dropout_prob=0.4,
+                     seed=3)
+    assert m.rounds_done == 2
+    assert m.dropped_updates > 0
+    # rounds with silent dropouts pad to the 600s window close
+    assert m.finished_at > 600.0
+
+
+def test_arrival_model_announce_dropouts_needs_no_window():
+    """With announced dropouts the round target shrinks at round start, so
+    a windowless job runs fine; silent dropouts still require t_wait."""
+    from repro.core import Simulator
+    from repro.core.cluster import Cluster, ClusterConfig
+    from repro.core.estimator import AggregationEstimator
+    from repro.core.strategies import ArrivalModel, RoundEngine
+
+    job = make_job(n=6, rounds=3)  # active parties, t_wait_s=None
+    sim = Simulator()
+    cluster = Cluster(sim, ClusterConfig(capacity=4))
+    engine = RoundEngine(
+        sim, cluster, job, AggregationEstimator(0.05), "eager_ao",
+        arrival_model=ArrivalModel(job, dropout_prob=0.4, seed=5,
+                                   announce_dropouts=True))
+    engine.start()
+    sim.run()
+    m = engine.metrics
+    assert m.rounds_done == 3
+    assert m.dropped_updates > 0
+    assert m.updates_received + m.dropped_updates == 6 * 3
+    # the silent variant still demands the §4.3 window
+    with pytest.raises(AssertionError, match="t_wait"):
+        ArrivalModel(make_job(n=6, rounds=3), dropout_prob=0.4)

@@ -77,6 +77,13 @@ def main() -> None:
         print(fleet.HEADER)
         fleet.run(full="--full" in sys.argv)
 
+    if only in (None, "online"):
+        _section("online control plane: burst traffic, autoscaling, SLA")
+        from benchmarks import online
+
+        print(online.HEADER)
+        online.run(full="--full" in sys.argv)
+
     if only in (None, "hierarchical"):
         _section("hierarchical edge->cloud JIT aggregation (beyond-paper)")
         from benchmarks import hierarchical

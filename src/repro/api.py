@@ -26,6 +26,12 @@ facade:
     platform.run()
     rollup = runner.result().fleet                # -> FleetMetrics
 
+    # 2c. long-lived online service: jobs arrive on an unbounded stream,
+    #     the aggregator pool autoscales, SLA classes gate admission
+    svc = platform.serve(TraceStream(trace, timing="poisson"), sla="gold")
+    svc.advance(until=3600.0); windows = svc.poll()   # mid-run metrics
+    report = svc.drain()                              # -> OnlineReport
+
     # 3. real-JAX federated training (parties + Pallas fusion kernels),
     #    priced under ANY registered strategy via the measured-arrival replay
     result = platform.train(model_cfg, job)             # -> TrainingResult
@@ -86,6 +92,7 @@ class Platform:
         self._scheduler: Optional[JITScheduler] = None
         self._fleets: List[Any] = []  # List[repro.fleet.FleetRunner]
         self._fleet_job_ids: set = set()
+        self._services: List[Any] = []  # List[repro.online.OnlineController]
         self._ran = False
 
     # ---- vehicle 1: per-job simulation engines -----------------------------
@@ -215,6 +222,85 @@ class Platform:
         self._fleets.append(runner)
         self._fleet_job_ids.update(jt.job_id for jt in trace.jobs)
         return runner
+
+    # ---- vehicle 2c: the online control plane (long-lived service) ---------
+    def serve(
+        self,
+        stream,
+        *,
+        strategy="jit",
+        sla=None,
+        sla_classes=None,
+        autoscaler=None,
+        admission=None,
+        window_s: float = 600.0,
+        seed: int = 0,
+        round_gap_s: float = 1.0,
+        priority_policy: str = "deadline",
+        recorder=None,
+    ):
+        """Run the Platform as a long-lived service consuming an unbounded
+        ``repro.online.ArrivalStream`` instead of a pre-drained trace;
+        returns the ``OnlineController``.
+
+            from repro.online import TraceStream
+            svc = platform.serve(TraceStream(trace), sla="gold")
+            svc.advance(until=3600.0)     # repeatable, unlike Platform.run
+            windows = svc.poll()          # completed metric windows so far
+            report = svc.drain()          # to quiescence -> OnlineReport
+
+        ``sla`` assigns each arriving job an SLA class (``None`` = all
+        ``gold``: admit everything, which makes ``serve`` on a
+        ``TraceStream(trace)`` arrival-identical to ``submit_fleet(trace)``
+        — the paired-comparison guarantee). Pass a class name, a
+        ``{job_id: class}`` dict, or a ``(job_trace, arrival_index) ->
+        class`` callable; classes default to ``repro.online.SLA_CLASSES``
+        (gold admits, silver queues under burst, best_effort sheds).
+
+        ``autoscaler`` (``AutoscalerConfig``) resizes the aggregator pool
+        against queue depth + drain backlog with hysteresis
+        (``AutoscalerConfig.fixed(n)`` pins it); ``admission``
+        (``AdmissionConfig``) sets the burst window/threshold and queue
+        size. Windowed metrics tumble every ``window_s`` and are pollable
+        mid-run via ``svc.poll()``.
+
+        The service drives the same shared cluster as every other vehicle;
+        job ids arriving on the stream must be fleet-unique (checked at
+        admission time). Drive with ``svc.advance``/``svc.drain`` — or
+        ``platform.run(until=...)``, which also starts any batch work
+        submitted alongside.
+        """
+        from repro.online.controller import OnlineController  # deferred
+
+        if self._ran:
+            raise RuntimeError(
+                "Platform.run() already called; build a new Platform "
+                "(simulated clusters are single-shot)")
+        svc = OnlineController(
+            self.sim, self.cluster, self.estimator, stream,
+            strategy=strategy, sla=sla, sla_classes=sla_classes,
+            autoscaler=autoscaler, admission=admission, window_s=window_s,
+            seed=seed, round_gap_s=round_gap_s,
+            priority_policy=priority_policy, recorder=recorder,
+            on_admitted=self._register_online_job,
+        )
+        # the service's runner joins the fleet list so Platform.metrics()
+        # includes online jobs alongside the batch vehicles
+        self._fleets.append(svc.runner)
+        self._services.append(svc)
+        return svc
+
+    def _register_online_job(self, job_id: str) -> None:
+        """Admission-time collision check: stream jobs must not collide
+        with ids on any other vehicle sharing this cluster (a collision
+        would merge per-job billing)."""
+        if job_id in self.engines or (
+            self._scheduler is not None and job_id in self._scheduler.jobs
+        ):
+            raise ValueError(
+                f"online job {job_id!r} collides with a job already "
+                f"submitted on another vehicle of this Platform")
+        self._fleet_job_ids.add(job_id)
 
     # ---- run ---------------------------------------------------------------
     def run(self, until: Optional[float] = None) -> Dict[str, JobMetrics]:

@@ -50,6 +50,10 @@ class Cluster:
     def __init__(self, sim: Simulator, config: ClusterConfig):
         self.sim = sim
         self.cfg = config
+        # live pool size; starts at the configured capacity and may be
+        # resized mid-run by an autoscaler (repro.online). cfg.capacity
+        # stays the initial/provisioned value.
+        self.capacity: int = config.capacity
         self.pending: List[Task] = []
         self.running: Dict[int, Task] = {}
         self._ids = itertools.count()
@@ -86,7 +90,21 @@ class Cluster:
         self._ensure_tick()
 
     def idle_capacity(self) -> int:
-        return self.cfg.capacity - len(self.running)
+        return self.capacity - len(self.running)
+
+    def resize(self, capacity: int) -> None:
+        """Resize the aggregator pool (online autoscaling, repro.online).
+
+        Growing may start queued tasks at the next scheduling tick;
+        shrinking never evicts running tasks — the pool drains down to the
+        new size as they finish (idle_capacity simply stays <= 0 until
+        then)."""
+        if capacity < 1:
+            raise ValueError(f"pool capacity must be >= 1, got {capacity}")
+        grew = capacity > self.capacity
+        self.capacity = capacity
+        if grew and self.pending:
+            self._ensure_tick()
 
     def record_deploy(self, job_id: str) -> None:
         """Count one container deployment (cluster-wide and per job)."""

@@ -37,6 +37,24 @@ def _percentile(xs: List[float], q: float) -> float:
     return ys[min(len(ys) - 1, int(q * len(ys)))]
 
 
+def percentile(xs: List[float], q: float) -> float:
+    """Public nearest-rank percentile — the definition every rollup
+    (per-job, batch fleet, windowed online) shares, so their percentiles
+    reconcile bit-for-bit on identical sample multisets."""
+    return _percentile(xs, q)
+
+
+def pooled_round_samples(
+    jobs: Dict[str, "JobMetrics"],
+) -> Tuple[List[float], List[float]]:
+    """Pool per-round (§6.2 latency, §5.5 lateness) samples across jobs in
+    job-insertion order — the one pooling ``fleet_rollup`` and the online
+    ``WindowedFleetMetrics`` end-of-run reconciliation both use."""
+    latencies = [x for m in jobs.values() for x in m.round_latencies]
+    lateness = [x for m in jobs.values() for x in m.round_lateness]
+    return latencies, lateness
+
+
 @dataclasses.dataclass
 class JobMetrics:
     job_id: str
@@ -176,8 +194,7 @@ def fleet_rollup(
     timeline_bins: int = 50,
 ) -> FleetMetrics:
     """Aggregate per-job §6.2 metrics into one fleet-level summary."""
-    latencies = [x for m in jobs.values() for x in m.round_latencies]
-    lateness = [x for m in jobs.values() for x in m.round_lateness]
+    latencies, lateness = pooled_round_samples(jobs)
     cs = sum(m.container_seconds for m in jobs.values())
     denom = capacity * makespan_s
     return FleetMetrics(

@@ -175,6 +175,16 @@ class AggregationStrategy:
     def on_round_end(self) -> None:
         """Round completed; cancel strategy-owned timers."""
 
+    def accrued_container_seconds(self) -> float:
+        """Container time the strategy has accrued but not yet billed to
+        the cluster. Long-lived containers (the always-on aggregator) bill
+        only at shutdown, so a run stopped mid-job would otherwise report
+        zero billing for them; ``RoundEngine.billed_metrics`` folds this in
+        so partial runs (``Platform.run(until=...)``) price what was
+        actually consumed. Zero once the job completes (everything billed)
+        and for strategies whose tasks bill at completion."""
+        return 0.0
+
 
 StrategyFactory = Callable[..., AggregationStrategy]
 _REGISTRY: Dict[str, Type[AggregationStrategy]] = {}

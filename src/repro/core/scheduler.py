@@ -244,6 +244,15 @@ class JITScheduler:
             self.sim.schedule(self.round_gap_s,
                               lambda j=st.job.job_id: self.start_round(j))
 
+    # ---- control-plane signals (repro.online autoscaler) --------------------------
+    def drain_backlog(self) -> int:
+        """Updates queued for aggregation but not yet covered by a
+        submitted drain task, summed over arrival-gated jobs — together
+        with ``len(cluster.pending)`` this is the open-loop controller's
+        scale-up pressure signal."""
+        return sum(max(st.arrived - st.submitted, 0)
+                   for st in self.jobs.values() if st.gated)
+
     # ---- feedback from parties ---------------------------------------------------
     def observe_update(self, job_id: str, party_id: str,
                        train_time_s: float) -> None:

@@ -585,11 +585,19 @@ class RoundEngine:
         """This job's metrics with billing read live from the cluster, so
         runs stopped early report what was actually billed (identical to
         the engine's own value once the job completes). The one builder
-        for ``Platform.metrics`` and ``FleetRunner.metrics``."""
+        for ``Platform.metrics`` and ``FleetRunner.metrics``.
+
+        Containers that bill only at release — the always-on aggregator
+        and a live streaming container — contribute their accrued-so-far
+        time too, so a partially-drained run never reports a job as free
+        while its dedicated container has been alive for hours."""
         m = self.metrics
         m.n_deploys = self.cluster.n_deploys_by_job.get(self.job.job_id, 0)
+        live = self.impl.accrued_container_seconds()
+        if self.stream_deployed and self.stream_start_t is not None:
+            live += self.sim.now - self.stream_start_t
         m.container_seconds = self.cluster.container_seconds_by_job.get(
-            self.job.job_id, 0.0)
+            self.job.job_id, 0.0) + live
         m.cost_usd = m.container_seconds * price
         return m
 
@@ -630,6 +638,11 @@ class EagerAO(AggregationStrategy):
         if self.ao is not None:
             self.ao.shutdown()
             self.ao = None
+
+    def accrued_container_seconds(self) -> float:
+        if self.ao is None:
+            return 0.0  # shut down: everything billed to the cluster
+        return self.engine.sim.now - self.ao.start_t
 
     def _process(self):
         e = self.engine

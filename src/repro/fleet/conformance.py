@@ -43,10 +43,18 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.cluster import ClusterConfig
 from repro.core.estimator import AggregationEstimator
+from repro.core.jobspec import FLJobSpec, PartySpec
 from repro.fleet.fleet import FleetResult
-from repro.fleet.traces import WorkloadTrace, synthetic_fleet
+from repro.fleet.traces import (
+    MeasuredRound,
+    WorkloadTrace,
+    fleet_from_measured,
+    synthetic_fleet,
+)
 
 #: tier name -> containers in the shared aggregation pool
 CAPACITY_TIERS: Dict[str, int] = {"tiny": 2, "default": 8}
@@ -58,6 +66,47 @@ TIER_T_PAIR_S: Dict[str, float] = {"tiny": 2.0, "default": 0.05}
 #: pattern; "mixed" is a cycle of these and adds no new cell)
 CONFORMANCE_PATTERNS: Tuple[str, ...] = (
     "steady", "diurnal", "straggler", "intermittent", "dropout")
+
+#: the measured cell family replays a recorded real-training export
+#: (``fleet_from_measured``) instead of sampling synthetic availability —
+#: the carried ROADMAP follow-up: the arrival-parity invariant must hold
+#: when BOTH vehicles replay the same ``measured_rounds`` verbatim
+MEASURED_PATTERN = "measured"
+
+
+def pseudo_measured_export(
+    *,
+    n_parties: int = 6,
+    rounds: int = 5,
+    seed: int = 0,
+    mean_train_s: float = 45.0,
+    comm_s: float = 0.5,
+) -> Tuple[FLJobSpec, List[MeasuredRound]]:
+    """A deterministic stand-in for ``FLJobRuntime.measured_rounds``: one
+    job spec plus per-round ``{party: (train_s, comm_s)}`` observations,
+    shaped like a real export (per-party mean offsets, per-round jitter)
+    but reproducible without running JAX training — so the measured cell
+    family can run in the fast CI tier."""
+    rng = np.random.default_rng(seed)
+    pids = [f"mp{i}" for i in range(n_parties)]
+    means = mean_train_s * rng.uniform(0.7, 1.3, size=n_parties)
+    measured: List[MeasuredRound] = [
+        {pid: (float(means[i] * rng.uniform(0.9, 1.15)), comm_s)
+         for i, pid in enumerate(pids)}
+        for _ in range(rounds)
+    ]
+    spec = FLJobSpec(
+        job_id="measured",
+        model_arch="measured-export",
+        model_bytes=50 << 20,
+        rounds=rounds,
+        parties={
+            pid: PartySpec(pid, epoch_time_s=float(means[i]),
+                           dataset_size=1000)
+            for i, pid in enumerate(pids)
+        },
+    )
+    return spec, measured
 
 #: every registered deployment strategy; "jit" runs the scheduler vehicle,
 #: the rest run per-job RoundEngine baselines
@@ -106,6 +155,19 @@ class CellSpec:
         return f"{self.pattern}/{self.tier}{h}"
 
     def trace(self) -> WorkloadTrace:
+        if self.pattern == MEASURED_PATTERN:
+            # measured replay: staggered copies of one recorded run
+            # (fleet_from_measured); round count is fixed by the export
+            if self.horizon_rounds is not None:
+                raise ValueError(
+                    "measured cells replay recorded rounds exactly; "
+                    "horizon_rounds does not apply")
+            spec, measured = pseudo_measured_export(seed=self.seed)
+            trace = fleet_from_measured(
+                spec, measured, n_jobs=self.n_jobs,
+                stagger_s=self.stagger_s)
+            trace.cluster_capacity = self.capacity
+            return trace
         return synthetic_fleet(
             self.n_jobs, self.pattern, seed=self.seed,
             stagger_s=self.stagger_s, cluster_capacity=self.capacity,
@@ -279,6 +341,16 @@ def default_matrix(*, n_jobs: int = 5, seed: int = 0) -> List[CellSpec]:
         cells.append(CellSpec(
             pattern=pattern, tier="tiny", n_jobs=n_jobs, seed=seed,
             min_savings_pct=None, p50_band_s=20.0, p95_band_s=80.0))
+    # the measured cell family (carried ROADMAP follow-up): replayed
+    # real-run exports must hold the same arrival-parity invariant — a
+    # verbatim replay has even less room for divergence than sampled
+    # patterns, so any drift here is a vehicle bug, not workload noise
+    cells.append(CellSpec(
+        pattern=MEASURED_PATTERN, tier="default", n_jobs=n_jobs, seed=seed,
+        min_savings_pct=60.0, p50_band_s=5.0, p95_band_s=15.0))
+    cells.append(CellSpec(
+        pattern=MEASURED_PATTERN, tier="tiny", n_jobs=n_jobs, seed=seed,
+        min_savings_pct=None, p50_band_s=20.0, p95_band_s=80.0))
     return cells
 
 

@@ -23,7 +23,7 @@ preemption/deploy counts and the cluster-utilization timeline.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Set, Union
+from typing import Callable, Dict, Optional, Set, Union
 
 from repro.core.cluster import Cluster
 from repro.core.estimator import AggregationEstimator
@@ -64,6 +64,8 @@ class FleetRunner:
         round_gap_s: float = 1.0,
         priority_policy: str = "deadline",
         recorder: Optional[ArrivalRecorder] = None,
+        on_round: Optional[Callable[[str, int, float], None]] = None,
+        on_job_complete: Optional[Callable[[str], None]] = None,
     ):
         self.sim = sim
         self.cluster = cluster
@@ -73,6 +75,10 @@ class FleetRunner:
         # conformance hook: every (job, party, round) availability sample is
         # reported in the same order on BOTH vehicles (repro.fleet.conformance)
         self.recorder = recorder
+        # streaming hooks (repro.online): fired per completed round
+        # (job_id, round_idx, completion_t) and once per completed job
+        self.on_round = on_round
+        self.on_job_complete = on_job_complete
         # the scheduler vehicle handles the bare name "jit"; anything else
         # (including an explicit PolicyConfig, even strategy="jit") runs on
         # per-job RoundEngines over the same cluster
@@ -99,12 +105,14 @@ class FleetRunner:
         # validate the WHOLE trace before scheduling anything: a partial
         # schedule followed by a raise would leave phantom jobs billing
         # the shared cluster
-        seen = set()
+        self._ids: Set[str] = set()
         for jt in trace.jobs:
-            if jt.job_id in seen:
+            if jt.job_id in self._ids:
                 raise ValueError(
                     f"duplicate job id {jt.job_id!r} in trace {trace.name!r}")
-            seen.add(jt.job_id)
+            self._ids.add(jt.job_id)
+        # grows with submit_job (online admission past the batch trace)
+        self._n_expected = trace.n_jobs
         for jt in trace.jobs:
             self.sim.schedule_at(
                 jt.submit_s, lambda jt=jt: self._submit(jt))
@@ -112,9 +120,23 @@ class FleetRunner:
     @property
     def all_done(self) -> bool:
         return self.completed == set(self.specs) and (
-            len(self.specs) == self.trace.n_jobs)
+            len(self.specs) == self._n_expected)
 
     # ---- job submission ----------------------------------------------------
+    def submit_job(self, jt: JobTrace) -> None:
+        """Admit one more job into the running fleet NOW (at ``sim.now``).
+
+        This is the open-loop path (``repro.online``): batch traces
+        pre-schedule every job at construction, an online controller admits
+        jobs as its arrival stream produces them. The job joins the same
+        shared cluster/scheduler and counts toward ``all_done``."""
+        if jt.job_id in self._ids:
+            raise ValueError(
+                f"duplicate job id {jt.job_id!r} in fleet {self.trace.name!r}")
+        self._ids.add(jt.job_id)
+        self._n_expected += 1
+        self._submit(jt)
+
     def _submit(self, jt: JobTrace) -> None:
         spec = jt.to_jobspec()
         self.specs[spec.job_id] = spec
@@ -130,7 +152,10 @@ class FleetRunner:
             arrival_model=FleetArrivalSource(
                 self.sim, self.parties[spec.job_id],
                 job_id=spec.job_id, recorder=self.recorder),
-            on_job_done=lambda j=spec.job_id: self.completed.add(j),
+            on_round_complete=(
+                None if self.on_round is None
+                else lambda r, t, j=spec.job_id: self.on_round(j, r, t)),
+            on_job_done=lambda j=spec.job_id: self._job_complete(j),
         )
         self.engines[spec.job_id] = engine
         engine.start()
@@ -159,8 +184,15 @@ class FleetRunner:
 
     def _on_sched_aggregated(self, job_id: str, round_idx: int,
                              t: float) -> None:
+        if self.on_round is not None:
+            self.on_round(job_id, round_idx, t)
         if round_idx + 1 >= self.specs[job_id].rounds:
-            self.completed.add(job_id)
+            self._job_complete(job_id)
+
+    def _job_complete(self, job_id: str) -> None:
+        self.completed.add(job_id)
+        if self.on_job_complete is not None:
+            self.on_job_complete(job_id)
 
     # ---- metrics -----------------------------------------------------------
     def metrics(self) -> Dict[str, JobMetrics]:
@@ -180,7 +212,17 @@ class FleetRunner:
     def result(self, *, timeline_bins: int = 50) -> FleetResult:
         """Per-job metrics + fleet rollup. The rollup's preemption count,
         utilization and timeline are cluster-wide — run one fleet per
-        Platform for clean numbers."""
+        Platform for clean numbers.
+
+        Partial runs (``Platform.run(until=...)`` stopping the clock before
+        the fleet drains) are well-defined on both vehicles: only jobs whose
+        trace ``submit_s`` has passed appear at all, each reports only the
+        rounds it actually completed by the cutoff, and billing is what the
+        cluster actually charged so far — including the accrued-but-unbilled
+        time of live always-on / streaming containers
+        (``RoundEngine.billed_metrics``). Unstarted jobs are never mixed in
+        and nothing raises; check ``all_done`` to distinguish a drained
+        fleet from a cutoff one."""
         jobs = self.metrics()
         fleet = fleet_rollup(
             jobs,

@@ -45,7 +45,10 @@ def test_conformance_matrix_cell(cell_name):
                for s, r in report.runs.items() if s != "jit")
     # every vehicle sampled every (job, party) for every trace round
     trace = spec.trace()
-    want_keys = {(j.job_id, pid) for j in trace.jobs for pid in j.parties}
+    # j.party_ids covers both synthetic (parties dict) and measured
+    # (ids recovered from the recorded rounds) cell families
+    want_keys = {(j.job_id, pid)
+                 for j in trace.jobs for pid in j.party_ids}
     for run in report.runs.values():
         assert set(run.arrivals) == want_keys
         for (job_id, _pid), samples in run.arrivals.items():

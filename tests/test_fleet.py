@@ -277,3 +277,47 @@ def test_fleet_scheduler_latencies_nonempty_and_rollup_sane():
     width = fleet.makespan_s / len(tl)
     integrated = sum(frac * width * 8 for _, frac in tl)  # capacity=8
     assert integrated == pytest.approx(fleet.container_seconds, rel=0.01)
+
+
+# --------------------------------------------------------------------------
+# partial runs: Platform.run(until=...) mid-fleet (repro.online satellite)
+# --------------------------------------------------------------------------
+def test_fleet_partial_run_until_reports_inflight_billing():
+    """Regression: stopping the clock mid-fleet is a well-defined partial
+    run — only jobs whose submit_s passed appear, result() does not raise,
+    and a live always-on aggregator bills its ACCRUED container time
+    instead of 0.0 (the pre-fix behavior: AO billing only landed when the
+    container shut down, so cutoff runs looked free)."""
+    trace = synthetic_fleet(6, "steady", seed=5, stagger_s=100.0)
+    platform = _platform()
+    runner = platform.submit_fleet(trace, strategy="eager_ao")
+    platform.run(until=250.0)
+    assert not runner.all_done
+    res = runner.result()  # must not raise on a cutoff fleet
+    submitted = {jt.job_id for jt in trace.jobs if jt.submit_s <= 250.0}
+    assert set(res.jobs) == submitted
+    assert 0 < len(submitted) < len(trace.jobs)  # genuinely partial
+    by_id = {jt.job_id: jt for jt in trace.jobs}
+    for job_id, m in res.jobs.items():
+        assert m.rounds_done <= by_id[job_id].rounds
+        # the AO container has been alive since submit: accrued billing
+        assert m.container_seconds > 0.0
+        assert m.container_seconds <= 250.0 - by_id[job_id].submit_s + 1e-9
+    assert any(m.rounds_done < by_id[j].rounds
+               for j, m in res.jobs.items())
+    assert res.fleet.container_seconds == pytest.approx(
+        sum(m.container_seconds for m in res.jobs.values()))
+
+
+def test_fleet_partial_run_until_scheduler_vehicle():
+    """The jit scheduler vehicle under the same cutoff: unstarted jobs are
+    never mixed in and the rollup covers only completed rounds."""
+    trace = synthetic_fleet(6, "steady", seed=5, stagger_s=100.0)
+    platform = _platform()
+    runner = platform.submit_fleet(trace, strategy="jit")
+    platform.run(until=250.0)
+    assert not runner.all_done
+    res = runner.result()
+    assert set(res.jobs) == {jt.job_id for jt in trace.jobs
+                             if jt.submit_s <= 250.0}
+    assert res.fleet.rounds_done < sum(jt.rounds for jt in trace.jobs)

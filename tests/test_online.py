@@ -1,0 +1,468 @@
+"""repro.online: the Platform as a long-lived service — arrival streams,
+admission control with SLA classes, aggregator-pool autoscaling, tumbling
+windowed metrics, and the golden burst-scenario acceptance cell."""
+import dataclasses
+
+import pytest
+
+from repro.api import Platform
+from repro.core import AggregationEstimator, ClusterConfig, Simulator
+from repro.core.cluster import Cluster
+from repro.core.jobspec import FLJobSpec, PartySpec
+from repro.fleet import synthetic_fleet
+from repro.online import (
+    AdmissionConfig,
+    AutoscalerConfig,
+    SLA_CLASSES,
+    StreamHandle,
+    TraceStream,
+    WindowedFleetMetrics,
+)
+
+
+def _platform(capacity=8, t_pair_s=0.05):
+    return Platform(ClusterConfig(capacity=capacity),
+                    AggregationEstimator(t_pair_s=t_pair_s))
+
+
+# --------------------------------------------------------------------------
+# TraceStream: replay + open-loop re-timing
+# --------------------------------------------------------------------------
+def test_trace_stream_validation():
+    trace = synthetic_fleet(2, "steady", seed=0)
+    with pytest.raises(ValueError, match="timing"):
+        TraceStream(trace, timing="bogus")
+    with pytest.raises(ValueError, match="mean_interarrival_s"):
+        TraceStream(trace, timing="poisson", mean_interarrival_s=0.0)
+    with pytest.raises(ValueError, match="diurnal_amplitude"):
+        TraceStream(trace, timing="poisson", diurnal_amplitude=1.0)
+    with pytest.raises(ValueError, match="burst"):
+        TraceStream(trace, timing="poisson", burst=(0.0, -1.0, 3.0))
+    with pytest.raises(ValueError, match="repeat"):
+        TraceStream(trace, timing="poisson", repeat=0)
+    # replaying recorded submit times twice makes no sense open-loop
+    with pytest.raises(ValueError, match="open-loop timing"):
+        TraceStream(trace, timing="trace", repeat=2)
+
+
+def test_trace_stream_trace_timing_is_exact_sorted_replay():
+    trace = synthetic_fleet(5, "mixed", seed=7)
+    stream = TraceStream(trace)
+    got = []
+    while not stream.closed:
+        t, jt = stream.next_job(0.0)
+        got.append((t, jt.job_id))
+    assert [t for t, _ in got] == sorted(jt.submit_s for jt in trace.jobs)
+    assert {j for _, j in got} == {jt.job_id for jt in trace.jobs}
+    assert stream.next_job(0.0) is None and stream.closed
+
+
+def test_trace_stream_uniform_timing_applies_rate_knobs():
+    trace = synthetic_fleet(3, "steady", seed=0)
+    # flat: deterministic gaps of exactly mean_interarrival_s
+    flat = TraceStream(trace, timing="uniform", mean_interarrival_s=60.0)
+    times = [flat.next_job(0.0)[0] for _ in range(3)]
+    assert times == [60.0, 120.0, 180.0]
+    # a 3x burst from t=0 triples the rate: gaps of 20s
+    burst = TraceStream(trace, timing="uniform", mean_interarrival_s=60.0,
+                        burst=(0.0, 1e9, 3.0))
+    assert [burst.next_job(0.0)[0] for _ in range(3)] == [20.0, 40.0, 60.0]
+
+
+def test_trace_stream_poisson_is_seeded_and_repeat_suffixes_ids():
+    trace = synthetic_fleet(4, "steady", seed=2)
+
+    def arrivals(seed, repeat=1):
+        s = TraceStream(trace, timing="poisson", mean_interarrival_s=30.0,
+                        seed=seed, repeat=repeat)
+        out = []
+        while not s.closed:
+            t, jt = s.next_job(0.0)
+            out.append((t, jt.job_id, jt.submit_s))
+        return out
+
+    a, b = arrivals(5), arrivals(5)
+    assert a == b  # same seed, same stream
+    assert arrivals(6) != a
+    # re-timed jobs carry the NEW submit time (non-decreasing)
+    assert all(t == sub for t, _, sub in a)
+    assert [t for t, _, _ in a] == sorted(t for t, _, _ in a)
+    twice = arrivals(5, repeat=2)
+    assert len(twice) == 2 * len(a)
+    assert {j for _, j, _ in twice} == {
+        f"{jt.job_id}#{c}" for jt in trace.jobs for c in (0, 1)}
+
+
+# --------------------------------------------------------------------------
+# StreamHandle: programmatic injection
+# --------------------------------------------------------------------------
+def test_stream_handle_submit_close_semantics():
+    trace = synthetic_fleet(3, "steady", seed=0)
+    j0, j1, j2 = trace.jobs
+    handle = StreamHandle()
+    assert handle.next_job(0.0) is None and not handle.closed
+    handle.submit(j0)                 # arrives when pulled
+    handle.submit(j1, at=50.0)        # arrives at t=50
+    handle.submit(j2, at=10.0)        # past "at" clamps to now
+    t, got = handle.next_job(5.0)
+    assert (t, got.submit_s) == (5.0, 5.0) and got.job_id == j0.job_id
+    assert handle.next_job(5.0)[0] == 50.0
+    assert handle.next_job(20.0) == (20.0, dataclasses.replace(
+        j2, submit_s=20.0))
+    handle.close()
+    assert handle.closed
+    with pytest.raises(RuntimeError, match="closed"):
+        handle.submit(j0)
+
+
+def test_stream_handle_waker_announces_work_and_close():
+    seen = []
+    handle = StreamHandle()
+    handle.bind_waker(seen.append)
+    handle.submit(synthetic_fleet(1, "steady", seed=0).jobs[0], at=9.0)
+    handle.close()
+    assert seen == [9.0, None]
+    # closed only counts once the pending queue drained too
+    assert not handle.closed
+    handle.next_job(0.0)
+    assert handle.closed
+
+
+# --------------------------------------------------------------------------
+# WindowedFleetMetrics edge semantics (regression locks)
+# --------------------------------------------------------------------------
+def _windows(window_s=10.0, cs=None, pool=3):
+    sim = Simulator()
+    wm = WindowedFleetMetrics(
+        sim, window_s,
+        cs_getter=(cs or (lambda: 0.0)),
+        pool_getter=lambda: pool,
+        price_per_container_s=0.5,
+    )
+    wm.start()
+    return sim, wm
+
+
+def test_window_validation_and_unknown_outcome():
+    sim = Simulator()
+    with pytest.raises(ValueError, match="window_s"):
+        WindowedFleetMetrics(sim, 0.0, cs_getter=lambda: 0.0,
+                             pool_getter=lambda: 1,
+                             price_per_container_s=0.0)
+    _, wm = _windows()
+    with pytest.raises(ValueError, match="outcome"):
+        wm.observe_admission("bogus")
+
+
+def test_empty_windows_report_none_not_fake_zero():
+    sim, wm = _windows()
+    sim.run(until=35.0)  # boundaries at 10, 20, 30 fire; nothing observed
+    snap = wm.snapshot()
+    assert [w.index for w in snap] == [0, 1, 2]
+    for w in snap:
+        assert w.n_rounds == 0 and w.latencies == []
+        assert w.p50_latency_s is None and w.p95_latency_s is None
+        assert w.summary()["p95_lateness_s"] is None
+    # one real sample in the live window: the pooled rollup sees ONLY it —
+    # empty windows never injected 0.0 samples that would drag percentiles
+    wm.observe_round("gold", [7.5], [2.0])
+    wm.close()
+    roll = wm.rollup()
+    assert roll["p50_latency_s"] == roll["p95_latency_s"] == 7.5
+    assert roll["p95_lateness_by_class_s"] == {"gold": 2.0}
+    assert roll["rounds_done"] == 1 and roll["windows"] == 4
+
+
+def test_final_window_clamps_to_horizon_and_single_sample_p95():
+    sim, wm = _windows()
+    sim.run(until=33.5)
+    wm.observe_round("gold", [4.0], [])
+    wm.close()  # horizon = sim.now = 33.5, mid-window
+    last = wm.snapshot()[-1]
+    assert (last.start_s, last.end_s) == (30.0, 33.5)
+    # a single-sample window has a finite p95 == its one sample
+    assert last.p95_latency_s == 4.0 and last.n_rounds == 1
+    assert wm.rollup()["makespan_s"] == 33.5
+
+
+def test_close_on_boundary_drops_zero_width_residue_and_is_idempotent():
+    sim, wm = _windows()
+    sim.run(until=30.0)
+    wm.close(horizon_s=30.0)  # horizon lands exactly on a boundary
+    assert [w.end_s for w in wm.snapshot()] == [10.0, 20.0, 30.0]
+    wm.close()  # idempotent
+    assert len(wm.snapshot()) == 3
+
+
+def test_snapshot_is_frozen_and_rollup_requires_close():
+    cs = {"v": 0.0}
+    sim, wm = _windows(cs=lambda: cs["v"])
+    wm.observe_round("gold", [1.0], [0.5])
+    cs["v"] = 8.0
+    sim.run(until=15.0)
+    with pytest.raises(RuntimeError, match="close"):
+        wm.rollup()
+    snap = wm.snapshot()
+    snap[0].latencies.append(99.0)  # mutate the copy ...
+    assert wm.snapshot()[0].latencies == [1.0]  # ... the original is frozen
+    # per-window billing is the delta of the cumulative getter
+    assert snap[0].container_seconds == 8.0
+    cs["v"] = 11.0
+    wm.close()
+    roll = wm.rollup()
+    assert roll["container_seconds"] == 11.0
+    assert roll["cost_usd"] == 11.0 * 0.5
+
+
+# --------------------------------------------------------------------------
+# config validation + Cluster.resize
+# --------------------------------------------------------------------------
+def test_config_validation():
+    with pytest.raises(ValueError, match="min_capacity"):
+        AutoscalerConfig(min_capacity=0)
+    with pytest.raises(ValueError, match="max_capacity"):
+        AutoscalerConfig(min_capacity=4, max_capacity=2)
+    with pytest.raises(ValueError, match="control_interval_s"):
+        AutoscalerConfig(control_interval_s=0.0)
+    with pytest.raises(ValueError, match="scale_down_occupancy"):
+        AutoscalerConfig(scale_down_occupancy=1.5)
+    with pytest.raises(ValueError, match="scale_down_ticks"):
+        AutoscalerConfig(scale_down_ticks=0)
+    fixed = AutoscalerConfig.fixed(8)
+    assert fixed.min_capacity == fixed.max_capacity == 8
+    with pytest.raises(ValueError, match="burst_window_s"):
+        AdmissionConfig(burst_window_s=0.0)
+    with pytest.raises(ValueError, match="burst_arrivals"):
+        AdmissionConfig(burst_arrivals=0)
+    with pytest.raises(ValueError, match="dequeue_per_tick"):
+        AdmissionConfig(dequeue_per_tick=0)
+
+
+def test_cluster_resize_shrink_never_evicts_grow_starts_pending():
+    sim = Simulator()
+    cluster = Cluster(sim, ClusterConfig(capacity=1))
+    done = []
+    cluster.submit("a", 0.0, 10.0, lambda t: done.append("a"))
+    cluster.submit("b", 0.0, 10.0, lambda t: done.append("b"))
+    with pytest.raises(ValueError, match="capacity"):
+        cluster.resize(0)
+    sim.run(until=1.0)
+    assert len(cluster.running) == 1 and len(cluster.pending) == 1
+    cluster.resize(2)  # growing starts the queued task
+    sim.run(until=2.0)
+    assert len(cluster.running) == 2 and not cluster.pending
+    cluster.resize(1)  # shrinking never evicts: both drain to completion
+    assert len(cluster.running) == 2
+    sim.run()
+    assert sorted(done) == ["a", "b"] and cluster.capacity == 1
+
+
+# --------------------------------------------------------------------------
+# admission control: the gold/silver/best_effort ladder under burst
+# --------------------------------------------------------------------------
+def test_admission_ladder_under_burst():
+    trace = synthetic_fleet(6, "steady", seed=0)
+    order = ["gold", "gold", "gold", "silver", "silver", "best_effort"]
+    platform = _platform()
+    handle = StreamHandle()
+    svc = platform.serve(
+        handle, sla=lambda jt, i: order[i],
+        autoscaler=AutoscalerConfig.fixed(8),
+        admission=AdmissionConfig(burst_window_s=100.0, burst_arrivals=2,
+                                  queue_limit=1),
+    )
+    for jt in trace.jobs:
+        handle.submit(jt)  # all six arrive at t=0, in submit order
+    # an open handle means the service is live forever: drain() refuses
+    with pytest.raises(RuntimeError, match="close"):
+        svc.drain()
+    handle.close()
+    report = svc.drain()
+    g, s, b = (report.classes[n] for n in ("gold", "silver", "best_effort"))
+    # burst trips at the 3rd arrival, but gold still admits immediately
+    assert (g.arrived, g.admitted, g.shed) == (3, 3, 0)
+    # 1st silver queues; 2nd overflows the size-1 queue and is shed
+    assert (s.arrived, s.admitted, s.queued, s.shed) == (2, 1, 1, 1)
+    # best_effort sheds outright under burst
+    assert (b.arrived, b.admitted, b.shed) == (1, 0, 1)
+    assert len(report.shed_jobs) == 2
+    # the queued silver is released at the first control tick after the
+    # trailing 100s burst window clears: t=120 (ticks every 30s)
+    assert s.queue_wait_s == [pytest.approx(120.0)]
+    # admission outcomes landed in the windows too
+    roll = report.rollup
+    assert (roll["admitted"], roll["queued"], roll["shed"]) == (4, 1, 2)
+    # classes with no completed rounds (all shed) attain their band vacuously
+    att = report.sla_attainment()
+    assert att["best_effort"]["p95_lateness_s"] is None
+    assert att["best_effort"]["attained"] is True
+
+
+def test_admission_classifier_errors():
+    trace = synthetic_fleet(2, "steady", seed=0)
+    svc = _platform().serve(TraceStream(trace), sla="platinum")
+    with pytest.raises(ValueError, match="unknown SLA class"):
+        svc.advance(until=10.0)
+    svc2 = _platform().serve(TraceStream(trace), sla={})
+    with pytest.raises(KeyError, match="no class for job"):
+        svc2.advance(until=10.0)
+    with pytest.raises(TypeError, match="sla must be"):
+        _platform().serve(TraceStream(trace), sla=123)
+    # a custom ladder replaces the default classes entirely
+    svc3 = _platform().serve(
+        TraceStream(trace), sla="gold",
+        sla_classes={"vip": SLA_CLASSES["gold"]})
+    with pytest.raises(ValueError, match="unknown SLA class"):
+        svc3.advance(until=10.0)
+
+
+# --------------------------------------------------------------------------
+# Platform.serve integration
+# --------------------------------------------------------------------------
+def test_serve_rejects_colliding_ids_and_post_run_serving():
+    platform = _platform()
+    platform.submit(FLJobSpec("dup", "m", 1 << 20, parties={
+        "p0": PartySpec("p0", epoch_time_s=5.0)}))
+    handle = StreamHandle()
+    svc = platform.serve(handle)
+    handle.submit(dataclasses.replace(
+        synthetic_fleet(1, "steady", seed=0).jobs[0], job_id="dup"))
+    with pytest.raises(ValueError, match="collides"):
+        svc.advance(until=1.0)
+    ran = _platform()
+    ran.run()
+    with pytest.raises(RuntimeError, match="already called"):
+        ran.serve(StreamHandle())
+
+
+# --------------------------------------------------------------------------
+# reconciliation: serve(TraceStream(trace)) vs batch submit_fleet(trace)
+# --------------------------------------------------------------------------
+def _record(log):
+    def rec(job_id, pid, round_idx, sample):
+        log.setdefault((job_id, pid), []).append((round_idx, sample))
+    return rec
+
+
+def test_trace_replay_reconciles_bit_for_bit_with_batch():
+    trace = synthetic_fleet(6, "steady", seed=3)
+    batch_log = {}
+    batch_platform = _platform()
+    runner = batch_platform.submit_fleet(trace, recorder=_record(batch_log))
+    batch_platform.run()
+    batch = runner.result()
+
+    online_log = {}
+    platform = _platform()
+    svc = platform.serve(TraceStream(trace), window_s=120.0,
+                         autoscaler=AutoscalerConfig.fixed(8),
+                         recorder=_record(online_log))
+    # mid-run poll: completed windows are frozen — a prefix of the final
+    svc.advance(until=600.0)
+    mid = svc.poll()
+    assert 1 <= len(mid) < 12
+    report = svc.drain()
+    for a, b in zip(mid, report.windows):
+        assert a.summary() == b.summary()
+        assert a.latencies == b.latencies and a.lateness == b.lateness
+
+    # identical per-party arrival sequences (satellite lock; the property
+    # test in test_online_property.py sweeps seeds/patterns/strategies)
+    assert online_log == batch_log
+    # and the end-of-run rollup reconciles bit-for-bit: same container-
+    # second float sum, same pooled percentiles — no approx here
+    roll = report.rollup
+    assert report.fleet.container_seconds == batch.fleet.container_seconds
+    assert roll["container_seconds"] == batch.fleet.container_seconds
+    assert roll["cost_usd"] == batch.fleet.cost_usd
+    assert roll["rounds_done"] == batch.fleet.rounds_done
+    assert roll["p50_latency_s"] == batch.fleet.p50_latency_s
+    assert roll["p95_latency_s"] == batch.fleet.p95_latency_s
+    assert roll["p95_lateness_s"] == batch.fleet.p95_lateness_s
+    # all-gold default: everything admitted, nothing queued or shed
+    assert roll["admitted"] == 6 and roll["shed"] == 0
+    # Platform.metrics() sees the online jobs like any other vehicle's
+    assert set(platform.metrics()) == {jt.job_id for jt in trace.jobs}
+    # fixed default pool: the timeline never moved
+    assert report.pool_timeline == [(0.0, 8)]
+    assert report.peak_pool == 8
+
+
+# --------------------------------------------------------------------------
+# the golden burst acceptance cell (benchmarks/online.py --smoke)
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def smoke_rows():
+    from benchmarks import online as bench
+
+    return {r["variant"]: r for r in bench.run(smoke=True)}
+
+
+def test_burst_variants_consume_identical_streams(smoke_rows):
+    jit = smoke_rows["jit-autoscaled"]
+    fixed = smoke_rows["jit-fixed"]
+    ao = smoke_rows["eager_ao-fixed"]
+    # admission is rate-based only: the admitted/queued/shed multiset pairs
+    # up exactly across strategies fed the same seeded stream
+    for k in ("arrived", "admitted", "queued", "shed", "best_effort_shed"):
+        assert jit[k] == fixed[k] == ao[k], k
+    assert (jit["arrived"], jit["admitted"], jit["queued"], jit["shed"]) \
+        == (18, 15, 3, 3)
+    # both jit variants run the identical admitted jobs to completion
+    assert jit["rounds"] == fixed["rounds"] == 66
+    # billing depends only on the strategy, not the pool size
+    assert jit["container_seconds"] == fixed["container_seconds"]
+
+
+def test_burst_golden_cell_autoscaled_jit_vs_eager_ao(smoke_rows):
+    jit = smoke_rows["jit-autoscaled"]
+    ao = smoke_rows["eager_ao-fixed"]
+    # the acceptance claim: autoscaled JIT bills <= 40% of fixed eager-AO
+    assert jit["container_seconds"] <= 0.40 * ao["container_seconds"]
+    assert jit["savings_vs_ao_pct"] == pytest.approx(95.83, abs=0.01)
+    # golden lock on the deterministic cell (seeded stream, virtual clock)
+    assert jit["container_seconds"] == pytest.approx(1161.0, abs=0.1)
+    assert ao["container_seconds"] == pytest.approx(27821.4, abs=0.1)
+    assert jit["makespan_s"] == pytest.approx(6191.8, abs=0.1)
+    assert jit["p50_latency_s"] == pytest.approx(11.86, abs=0.01)
+    assert jit["p95_latency_s"] == pytest.approx(49.09, abs=0.01)
+    assert jit["windows"] == 11
+
+
+def test_burst_golden_cell_sla_and_autoscaling(smoke_rows):
+    jit = smoke_rows["jit-autoscaled"]
+    fixed = smoke_rows["jit-fixed"]
+    # gold stays inside its declared band while best_effort sheds
+    assert jit["gold_attained"] is True
+    assert jit["gold_p95_lateness_s"] == pytest.approx(161.463, abs=0.01)
+    assert jit["gold_p95_lateness_s"] <= jit["gold_band_s"] == 240.0
+    assert jit["silver_p95_lateness_s"] == pytest.approx(426.459, abs=0.01)
+    assert jit["best_effort_shed"] == 3
+    # the autoscaler moved (both directions) and stayed within the caps
+    assert jit["scale_ups"] > 0 and jit["scale_downs"] > 0
+    assert jit["peak_pool"] == 8
+    assert fixed["scale_ups"] == 0 and fixed["scale_downs"] == 0
+    # reserved-pool savings: the autoscaled timeline beats the burst-peak
+    # fixed pool even before per-task billing
+    assert jit["pool_container_seconds"] == pytest.approx(34552.6, abs=0.1)
+    assert jit["pool_savings_vs_fixed_pct"] == pytest.approx(30.31, abs=0.01)
+    assert jit["pool_savings_vs_fixed_pct"] > 25.0
+
+
+@pytest.mark.slow
+def test_online_long_burst_scenario():
+    """Nightly: repeated trace cycles under two diurnal periods of 3x
+    burst. Savings hold; gold does NOT attain its band — sustained
+    overload needs SLA-class-aware pool priorities (ROADMAP deferred),
+    admission alone can't protect it."""
+    from benchmarks import online as bench
+
+    rows = {v: bench.serve_variant(bench.LONG, v, s, a)
+            for v, s, a in bench.VARIANTS}
+    jit, ao = rows["jit-autoscaled"], rows["eager_ao-fixed"]
+    for k in ("arrived", "admitted", "queued", "shed"):
+        assert jit[k] == ao[k], k
+    assert (jit["arrived"], jit["admitted"], jit["shed"]) == (48, 34, 14)
+    assert jit["container_seconds"] <= 0.40 * ao["container_seconds"]
+    assert jit["scale_ups"] > 0 and jit["scale_downs"] > 0
+    assert jit["gold_attained"] is False  # the honest deferred finding

@@ -1,0 +1,55 @@
+"""Property: an open-loop ``TraceStream`` replay of a closed trace through
+``Platform.serve`` produces the SAME per-party arrival sequences as batch
+``Platform.submit_fleet`` on that trace — for every seed, availability
+pattern and strategy vehicle. This is the paired-comparison guarantee the
+online control plane inherits from the batch conformance harness."""
+from _hyp import given, settings, st  # optional hypothesis (requirements-dev.txt)
+
+from repro.api import Platform
+from repro.core import AggregationEstimator, ClusterConfig
+from repro.fleet import synthetic_fleet
+from repro.online import TraceStream
+
+
+def _platform():
+    return Platform(ClusterConfig(capacity=8),
+                    AggregationEstimator(t_pair_s=0.05))
+
+
+def _recorder(log):
+    def rec(job_id, pid, round_idx, sample):
+        log.setdefault((job_id, pid), []).append((round_idx, sample))
+    return rec
+
+
+def _batch_arrivals(trace, strategy):
+    log = {}
+    platform = _platform()
+    runner = platform.submit_fleet(trace, strategy=strategy,
+                                   recorder=_recorder(log))
+    platform.run()
+    assert runner.all_done
+    return log
+
+
+def _online_arrivals(trace, strategy):
+    log = {}
+    platform = _platform()
+    svc = platform.serve(TraceStream(trace), strategy=strategy,
+                         recorder=_recorder(log))
+    report = svc.drain()
+    assert report.fleet.n_jobs == len(trace.jobs)
+    return log
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10**6),
+    pattern=st.sampled_from(["steady", "mixed", "dropout"]),
+    strategy=st.sampled_from(["jit", "eager_ao"]),
+)
+def test_trace_stream_replay_is_arrival_identical_to_batch(
+        seed, pattern, strategy):
+    trace = synthetic_fleet(3, pattern, seed=seed)
+    assert _online_arrivals(trace, strategy) == \
+        _batch_arrivals(trace, strategy)

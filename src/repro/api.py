@@ -182,10 +182,23 @@ class Platform:
         round_gap_s: float = 1.0,
         priority_policy: str = "deadline",
         recorder=None,
+        rng: str = "pcg64",
+        vectorized: Optional[bool] = None,
     ):
         """Queue a ``repro.fleet.WorkloadTrace`` on this platform's cluster;
         returns the ``FleetRunner`` (read ``runner.result()`` after
         ``run()``).
+
+        ``rng`` selects the synthetic parties' stream scheme: ``"pcg64"``
+        (default) is the original sequential per-party stream — existing
+        traces and goldens stay bit-identical; ``"philox"`` presamples each
+        job on counter-based per-party streams and (``vectorized``, on by
+        default for philox) drives the scheduler vehicle through the
+        batched fast path — one calendar trigger per job round instead of
+        one event per party arrival (the fleet-at-scale mode, see
+        ``benchmarks/simcore.py``). The paired per-party-stream guarantee
+        holds within either scheme; the two schemes draw different (equally
+        valid) arrival sequences.
 
         ``recorder``, if given, is called once per (job, party, round) with
         the sampled availability — ``None`` on a §2.2 no-show, else
@@ -218,6 +231,7 @@ class Platform:
             self.sim, self.cluster, self.estimator, trace,
             strategy=strategy, seed=seed, round_gap_s=round_gap_s,
             priority_policy=priority_policy, recorder=recorder,
+            rng=rng, vectorized=vectorized,
         )
         self._fleets.append(runner)
         self._fleet_job_ids.update(jt.job_id for jt in trace.jobs)

@@ -27,6 +27,15 @@ class ClusterConfig:
     checkpoint_s: float = 0.05  # persist state at shutdown/preemption
     delta_s: float = 1.0  # scheduling tick (paper's delta)
     price_per_container_s: float = 0.0002692  # US$ (Azure ACI, paper Fig. 9)
+    # occupancy recording (the fleet utilization timeline). Adjacent
+    # same-timestamp deltas are always merged (exact — binning integrates
+    # per distinct time). For long-horizon / fleet-scale traces the event
+    # list is otherwise unbounded: set occupancy_resolution_s > 0 to bucket
+    # event times (bounds memory at ~capacity x horizon/resolution entries,
+    # coarsens the timeline by at most one bucket), or record_occupancy
+    # False to drop recording entirely (timeline reads as empty).
+    record_occupancy: bool = True
+    occupancy_resolution_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -114,8 +123,26 @@ class Cluster:
         )
 
     def note_container(self, t: float, delta: int) -> None:
-        """Record a container coming up (+1) or going down (-1) at time t."""
-        self.occupancy_events.append((t, delta))
+        """Record a container coming up (+1) or going down (-1) at time t.
+
+        Same-timestamp deltas merge in place (net-zero entries are
+        dropped): the rollup timeline integrates between distinct times,
+        so merging is exact — it only bounds the list on event-dense
+        traces. ``occupancy_resolution_s`` additionally buckets t."""
+        if not self.cfg.record_occupancy:
+            return
+        res = self.cfg.occupancy_resolution_s
+        if res > 0.0:
+            t = int(t / res) * res
+        ev = self.occupancy_events
+        if ev and ev[-1][0] == t:
+            merged = ev[-1][1] + delta
+            if merged == 0:
+                ev.pop()
+            else:
+                ev[-1] = (t, merged)
+        else:
+            ev.append((t, delta))
 
     # ---- scheduling tick (every delta seconds while work exists) -----------
     def _ensure_tick(self) -> None:

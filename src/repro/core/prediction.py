@@ -217,3 +217,95 @@ class UpdatePredictor:
 
     def per_party(self) -> Dict[str, float]:
         return {pid: self.t_upd(pid) for pid in self.job.parties}
+
+
+class VectorizedUpdatePredictor:
+    """Array-backed ``UpdatePredictor`` for the fleet fast path.
+
+    Maintains per-party EWMA mean/var/count as numpy arrays and observes a
+    whole round of arrivals in one call, reproducing the scalar
+    ``PeriodicTracker`` recurrence value-for-value (same float64 ops, same
+    0.3 alpha, same count>=3 / std<=0.15*|mean| stability rule). Per-party
+    trackers are independent and ``t_rnd`` is only read at the next round
+    start, so batch observation at round start is state-equivalent to the
+    per-arrival feed — the fast==legacy equality test locks this.
+
+    Restricted to the spec shape fleet traces generate (epoch-sync jobs
+    with ``epoch_time_s`` declared and a fixed ``dataset_size``, so the
+    §4.2 size-drift regression branch is dead); anything else must use the
+    general scalar predictor.
+    """
+
+    alpha = 0.3  # matches PeriodicTracker.alpha
+
+    def __init__(self, job: FLJobSpec):
+        if job.sync_frequency != "epoch":
+            raise ValueError(
+                "VectorizedUpdatePredictor supports epoch-sync jobs only; "
+                f"got sync_frequency={job.sync_frequency!r}")
+        self.job = job
+        self.pids: List[str] = list(job.parties)
+        self.index: Dict[str, int] = {p: i for i, p in enumerate(self.pids)}
+        specs = [job.parties[p] for p in self.pids]
+        self.intermittent = np.array(
+            [s.mode == "intermittent" for s in specs])
+        if bool(self.intermittent.any()) and job.t_wait_s is None:
+            raise ValueError("intermittent parties need job.t_wait_s")
+        for s in specs:
+            if s.mode != "intermittent" and s.epoch_time_s is None:
+                raise ValueError(
+                    f"party {s.party_id}: VectorizedUpdatePredictor needs a "
+                    "declared epoch_time_s (use UpdatePredictor otherwise)")
+        self.declared = np.array(
+            [s.epoch_time_s if s.epoch_time_s is not None else 0.0
+             for s in specs], dtype=np.float64)
+        m = job.model_bytes
+        self.tcomm = np.array(
+            [m / s.bw_down + m / s.bw_up for s in specs], dtype=np.float64)
+        self.t_wait = float(job.t_wait_s or 0.0)
+        n = len(specs)
+        self.mean = np.zeros(n, dtype=np.float64)
+        self.var = np.zeros(n, dtype=np.float64)
+        self.count = np.zeros(n, dtype=np.int64)
+
+    # -- feedback ------------------------------------------------------------
+    def observe_batch(self, idx: np.ndarray, times: np.ndarray) -> None:
+        """One round's arrivals: party indices + observed train times.
+
+        Indices must be unique within a call (each party arrives at most
+        once per round) — duplicate indices would collapse to one EWMA
+        step under fancy-indexed assignment."""
+        if len(idx) == 0:
+            return
+        first = self.count[idx] == 0
+        self.count[idx] += 1
+        fi = idx[first]
+        self.mean[fi] = times[first]
+        self.var[fi] = 0.0
+        ri = idx[~first]
+        if len(ri):
+            delta = times[~first] - self.mean[ri]
+            self.mean[ri] += self.alpha * delta
+            self.var[ri] = (1.0 - self.alpha) * (
+                self.var[ri] + self.alpha * delta * delta)
+
+    def observe_round(self, party_id: str, train_time_s: float,
+                      dataset_size: Optional[int] = None) -> None:
+        """Scalar compatibility path (same signature as UpdatePredictor)."""
+        self.observe_batch(np.array([self.index[party_id]]),
+                           np.array([float(train_time_s)]))
+
+    # -- t_train / t_comm / t_rnd --------------------------------------------
+    def t_upd_all(self) -> np.ndarray:
+        std = np.sqrt(np.maximum(self.var, 0.0))
+        stable = (self.count >= 3) & (std <= 0.15 * np.abs(self.mean))
+        t_train = np.where(self.intermittent, self.t_wait,
+                           np.where(stable, self.mean, self.declared))
+        return t_train + self.tcomm
+
+    def t_rnd(self) -> float:
+        return float(np.max(self.t_upd_all()))  # Fig. 6 line 11
+
+    def per_party(self) -> Dict[str, float]:
+        upd = self.t_upd_all()
+        return {pid: float(upd[i]) for i, pid in enumerate(self.pids)}

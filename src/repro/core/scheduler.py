@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.cluster import Cluster, Task
 from repro.core.estimator import AggregationEstimator
 from repro.core.events import EventHandle, Simulator
@@ -82,6 +84,10 @@ class JobState:
     quorum_failures: int = 0  # rounds that closed below quorum
     # §6.2 aggregation latency per round: completion − last actual arrival
     latencies: List[float] = dataclasses.field(default_factory=list)
+    # ---- presampled fast path (begin_round_presampled) ----
+    fast: bool = False  # this round's arrivals are presampled
+    arrival_times: Optional[np.ndarray] = None  # sorted absolute times
+    trigger: Optional[EventHandle] = None  # next analytic drain trigger
 
     def to_metrics(self, cluster: Cluster, price: float) -> "JobMetrics":
         """This job's scheduler-vehicle JobMetrics, billing read live from
@@ -139,9 +145,13 @@ class JITScheduler:
         self.on_round_start = on_round_start  # (job_id, round_idx)
 
     # ---- Fig. 6 line 1: upon ARRIVAL -----------------------------------------
-    def upon_arrival(self, job: FLJobSpec, *, gated: bool = False) -> JobState:
+    def upon_arrival(self, job: FLJobSpec, *, gated: bool = False,
+                     predictor=None) -> JobState:
         job.validate()
-        st = JobState(job=job, predictor=UpdatePredictor(job), gated=gated)
+        st = JobState(job=job,
+                      predictor=predictor if predictor is not None
+                      else UpdatePredictor(job),
+                      gated=gated)
         st.t_rnd = st.predictor.t_rnd()  # lines 6-11
         st.t_agg = self.est.t_agg(job)  # line 13
         self.jobs[job.job_id] = st  # line 12 (FLJOBS[J])
@@ -168,6 +178,10 @@ class JITScheduler:
             st.first_drain_t = None
             st.first_drain_exec_t = None
             st.task = None
+            if st.trigger is not None:
+                st.trigger.cancel()
+                st.trigger = None
+            st.arrival_times = None
         else:
             st.task = self.cluster.submit(
                 job_id,
@@ -195,8 +209,10 @@ class JITScheduler:
                 self.cluster.boost(st.task, float("-inf"))
             else:
                 # work-conserving §5.5: with no quorum queued yet this is a
-                # no-op; the next deliver_update re-checks the (now armed)
-                # trigger, so no delta polling is needed
+                # no-op; the next deliver_update (or, on the presampled
+                # path, the analytic trigger) re-checks the armed state
+                if st.fast and st.arrival_times is not None:
+                    self._fast_sync(st)
                 self._maybe_drain(st)
             return
         if st.task is None or st.executing:
@@ -250,8 +266,14 @@ class JITScheduler:
         submitted drain task, summed over arrival-gated jobs — together
         with ``len(cluster.pending)`` this is the open-loop controller's
         scale-up pressure signal."""
-        return sum(max(st.arrived - st.submitted, 0)
-                   for st in self.jobs.values() if st.gated)
+        total = 0
+        for st in self.jobs.values():
+            if not st.gated:
+                continue
+            if st.fast and st.arrival_times is not None:
+                self._fast_sync(st)  # presampled arrivals land lazily
+            total += max(st.arrived - st.submitted, 0)
+        return total
 
     # ---- feedback from parties ---------------------------------------------------
     def observe_update(self, job_id: str, party_id: str,
@@ -331,18 +353,150 @@ class JITScheduler:
             # the observation — calibration stays conservative)
             st.first_drain_exec_t = st.task.started_at
         st.task = None
+        if st.fast and st.arrival_times is not None:
+            self._fast_sync(st)
         if st.arrived > st.submitted:
             # tail updates landed while the drain ran: fuse them too
             self._maybe_drain(st)
+            if st.fast and st.task is None:
+                self._fast_arm_trigger(st)  # not yet triggerable: re-arm
             return
         if st.arrived < st.expected:
-            return  # more arrivals coming; the next delivery re-triggers
+            # more arrivals coming; the next delivery (or the analytic
+            # trigger on the presampled path) re-triggers
+            if st.fast:
+                self._fast_arm_trigger(st)
+            return
         self._finish_gated_round(st)
+
+    # ---- presampled fast rounds (vectorized FleetRunner path) ----------------
+    #
+    # With a round's arrivals presampled and sorted up front, the per-arrival
+    # simulator events the legacy path schedules are redundant: the only
+    # times anything can HAPPEN are (i) the Fig. 6 deadline timer and (ii)
+    # the analytically-computable moments a drain first becomes submittable.
+    # The scheduler therefore keeps ONE trigger event per job round —
+    # `arrived`/`last_arrival` are synced lazily from the sorted time array
+    # (searchsorted against sim.now) — turning O(parties) events per round
+    # into O(drains). Drain submission times, work sizes, and the §5.4/§6.2
+    # bookkeeping are exactly the legacy path's (locked by the fast==legacy
+    # equality test); the one visible difference is that `updates_received`
+    # counts a round's arrivals at round start, so a mid-round `run(until=)`
+    # cutoff reports round-granular arrival counts.
+
+    def begin_round_presampled(
+        self,
+        job_id: str,
+        times_sorted: np.ndarray,
+        present_idx: np.ndarray,
+        train_times: np.ndarray,
+        n_no_shows: int,
+    ) -> None:
+        """Feed one presampled round to an arrival-gated job: absolute
+        arrival times (sorted), the present parties' predictor indices +
+        observed train times (batch calibration), and the no-show count.
+        Call right after ``start_round``."""
+        st = self.jobs[job_id]
+        assert st.gated, "presampled rounds are an arrival-gated-mode path"
+        st.fast = True
+        # batch the whole round's predictor feed: per-party trackers are
+        # independent and t_rnd is next read at the next start_round, by
+        # which point the legacy per-arrival feed has the same state
+        if len(present_idx):
+            st.predictor.observe_batch(present_idx, train_times)
+        st.updates_received += int(len(present_idx))
+        st.arrival_times = times_sorted
+        round_before = st.round_idx
+        if n_no_shows:
+            self.party_no_shows(job_id, n_no_shows)
+            if st.round_idx != round_before:
+                return  # the whole round dropped out and completed
+        self._fast_arm_trigger(st)
+
+    def party_no_shows(self, job_id: str, k: int) -> None:
+        """Batch §2.2 no-show report — same end-of-round logic as ``k``
+        scalar ``party_no_show`` calls (intermediate states are inert:
+        the end checks only depend on the final counts)."""
+        if k <= 0:
+            return
+        st = self.jobs[job_id]
+        assert st.gated, "no-show reporting is an arrival-gated-mode event"
+        st.expected -= k
+        st.no_shows += k
+        if st.arrived >= st.expected:
+            if st.arrived == 0 and st.expected <= 0:
+                # the entire round dropped out: a failed round (§5.1)
+                st.quorum_failures += 1
+                if st.timer:
+                    st.timer.cancel()
+                if st.trigger is not None:
+                    st.trigger.cancel()
+                    st.trigger = None
+                self._round_complete(st, self.sim.now)
+                return
+            if st.task is None and st.aggregated >= st.arrived:
+                self._finish_gated_round(st)
+            else:
+                self._maybe_drain(st)
+
+    def _fast_sync(self, st: JobState) -> None:
+        """Lazily absorb presampled arrivals with time <= now."""
+        times = st.arrival_times
+        if times is None:
+            return
+        n = int(np.searchsorted(times, self.sim.now, side="right"))
+        if n > st.arrived:
+            st.arrived = n
+            st.last_arrival = float(times[n - 1])
+
+    def _fast_next_trigger(self, st: JobState) -> Optional[float]:
+        """Earliest future moment a drain becomes submittable, in closed
+        form over the sorted arrival times: either every arrival is in
+        (times[E-1]) or the deadline has passed with a quorum queued and a
+        positive backlog (max(deadline, times[max(submitted, Q-1)]))."""
+        times = st.arrival_times
+        if times is None:
+            return None
+        e = len(times)
+        if e == 0 or st.submitted >= e:
+            return None
+        quorum = min(st.job.quorum, max(st.expected, 1))
+        q_at = max(st.submitted, quorum - 1)
+        if q_at >= e:
+            return float(times[e - 1])
+        return float(min(times[e - 1],
+                         max(st.deadline, float(times[q_at]))))
+
+    def _fast_arm_trigger(self, st: JobState) -> None:
+        if st.trigger is not None:
+            st.trigger.cancel()
+            st.trigger = None
+        t = self._fast_next_trigger(st)
+        if t is None:
+            return
+        st.trigger = self.sim.schedule_at(
+            max(t, self.sim.now),
+            lambda j=st.job.job_id: self._fast_trigger(j))
+
+    def _fast_trigger(self, job_id: str) -> None:
+        st = self.jobs.get(job_id)
+        if st is None or not st.gated or st.arrival_times is None:
+            return
+        st.trigger = None
+        self._fast_sync(st)
+        self._maybe_drain(st)
+        if st.task is None:
+            # not triggerable yet (e.g. quorum before the deadline): re-arm
+            self._fast_arm_trigger(st)
 
     def _finish_gated_round(self, st: JobState) -> None:
         t = self.sim.now
         if st.timer:
             st.timer.cancel()
+        if st.trigger is not None:
+            st.trigger.cancel()
+            st.trigger = None
+        st.arrival_times = None
         if st.expected < st.job.quorum:
             st.quorum_failures += 1  # round closed below quorum (§5.1)
         # §5.4 online calibration from the observed aggregation duration:

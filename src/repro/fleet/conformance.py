@@ -130,6 +130,11 @@ class CellSpec:
     seed: int = 0
     stagger_s: float = 30.0
     horizon_rounds: Optional[int] = None
+    # party stream scheme: "pcg64" (sequential, the default everywhere) or
+    # "philox" (counter-based presampled grids + the vectorized scheduler
+    # fast path) — the vectorized_matrix cells prove the paired-stream
+    # invariants hold on the fleet-at-scale path too
+    rng: str = "pcg64"
     # declared claims / tolerance bands
     min_savings_pct: Optional[float] = 60.0  # None: savings not claimed
     p50_band_s: float = 30.0  # allowed JIT p50 latency excess over eager-AO
@@ -140,6 +145,9 @@ class CellSpec:
             raise ValueError(
                 f"tier must be one of {sorted(CAPACITY_TIERS)}, "
                 f"got {self.tier!r}")
+        if self.rng not in ("pcg64", "philox"):
+            raise ValueError(
+                f"rng must be 'pcg64' or 'philox', got {self.rng!r}")
 
     @property
     def capacity(self) -> int:
@@ -152,7 +160,8 @@ class CellSpec:
     @property
     def name(self) -> str:
         h = f"-h{self.horizon_rounds}" if self.horizon_rounds else ""
-        return f"{self.pattern}/{self.tier}{h}"
+        r = f"-{self.rng}" if self.rng != "pcg64" else ""
+        return f"{self.pattern}/{self.tier}{h}{r}"
 
     def trace(self) -> WorkloadTrace:
         if self.pattern == MEASURED_PATTERN:
@@ -266,7 +275,7 @@ def run_cell(
             AggregationEstimator(t_pair_s=spec.t_pair_s),
         )
         runner = platform.submit_fleet(
-            trace, strategy=strategy, recorder=recorder)
+            trace, strategy=strategy, recorder=recorder, rng=spec.rng)
         platform.run()
         if not runner.all_done:
             failures.append(f"[{spec.name}] {strategy}: fleet did not run "
@@ -352,6 +361,22 @@ def default_matrix(*, n_jobs: int = 5, seed: int = 0) -> List[CellSpec]:
         pattern=MEASURED_PATTERN, tier="tiny", n_jobs=n_jobs, seed=seed,
         min_savings_pct=None, p50_band_s=20.0, p95_band_s=80.0))
     return cells
+
+
+def vectorized_matrix(*, n_jobs: int = 5, seed: int = 0) -> List[CellSpec]:
+    """The fleet-at-scale cells: every availability pattern on philox
+    counter streams, where the "jit" strategy runs the VECTORIZED
+    scheduler path (presampled rounds, analytic triggers) while the engine
+    baselines read the same grids scalar-wise through
+    ``CounterStreamParty.sample_round`` — so arrival parity here proves
+    the fast path and the per-event vehicles price identical sequences.
+    Claims mirror the default matrix's default-tier cells."""
+    return [
+        CellSpec(pattern=pattern, tier="default", n_jobs=n_jobs, seed=seed,
+                 rng="philox",
+                 min_savings_pct=60.0, p50_band_s=5.0, p95_band_s=15.0)
+        for pattern in CONFORMANCE_PATTERNS
+    ]
 
 
 def long_horizon_matrix(*, n_jobs: int = 6, seed: int = 0,

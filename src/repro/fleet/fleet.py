@@ -25,18 +25,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Optional, Set, Union
 
+import numpy as np
+
 from repro.core.cluster import Cluster
 from repro.core.estimator import AggregationEstimator
 from repro.core.events import Simulator
 from repro.core.jobspec import FLJobSpec
 from repro.core.metrics import FleetMetrics, JobMetrics, fleet_rollup
 from repro.core.policy import PolicyConfig, as_policy, get_strategy
+from repro.core.prediction import VectorizedUpdatePredictor
 from repro.core.scheduler import JITScheduler
 from repro.core.strategies import RoundEngine
 from repro.fleet.parties import (
     ArrivalRecorder,
     FleetArrivalSource,
-    build_parties,
+    build_party_processes,
 )
 from repro.fleet.traces import JobTrace, WorkloadTrace
 
@@ -66,12 +69,32 @@ class FleetRunner:
         recorder: Optional[ArrivalRecorder] = None,
         on_round: Optional[Callable[[str, int, float], None]] = None,
         on_job_complete: Optional[Callable[[str], None]] = None,
+        rng: str = "pcg64",
+        vectorized: Optional[bool] = None,
     ):
         self.sim = sim
         self.cluster = cluster
         self.est = estimator
         self.trace = trace
         self.seed = seed
+        # rng="philox" switches the synthetic parties to counter-based
+        # per-party streams (repro.fleet.streams) and, by default, turns on
+        # the vectorized scheduler-vehicle fast path: one presampled round
+        # per job fed to JITScheduler.begin_round_presampled instead of one
+        # simulator event per party-arrival. pcg64 (the default) keeps the
+        # original sequential streams — existing traces stay bit-identical.
+        if rng not in ("pcg64", "philox"):
+            raise ValueError(
+                f"unknown fleet rng {rng!r}: expected 'pcg64' or 'philox'")
+        if vectorized is None:
+            vectorized = rng == "philox"
+        if vectorized and rng != "philox":
+            raise ValueError(
+                "vectorized fleet sampling needs rng='philox' "
+                "(pcg64 streams are sequential and cannot be batched)")
+        self.rng = rng
+        self.vectorized = vectorized
+        self._samplers: Dict[str, object] = {}  # philox grids per job
         # conformance hook: every (job, party, round) availability sample is
         # reported in the same order on BOTH vehicles (repro.fleet.conformance)
         self.recorder = recorder
@@ -140,9 +163,18 @@ class FleetRunner:
     def _submit(self, jt: JobTrace) -> None:
         spec = jt.to_jobspec()
         self.specs[spec.job_id] = spec
-        self.parties[spec.job_id] = build_parties(jt, self.seed)
+        parties, sampler = build_party_processes(jt, self.seed, self.rng)
+        self.parties[spec.job_id] = parties
+        if sampler is not None:
+            self._samplers[spec.job_id] = sampler
         if self.use_scheduler:
-            self.scheduler.upon_arrival(spec, gated=True)
+            predictor = None
+            if self.vectorized and sampler is not None:
+                # array-backed predictor, fed one whole round at a time by
+                # begin_round_presampled (measured jobs keep the scalar one)
+                predictor = VectorizedUpdatePredictor(spec)
+            self.scheduler.upon_arrival(spec, gated=True,
+                                        predictor=predictor)
             self.scheduler.start_round(spec.job_id)
             return
         # MeasuredParty processes replay measured jobs through the same
@@ -163,8 +195,31 @@ class FleetRunner:
     # ---- scheduler-vehicle hooks -------------------------------------------
     def _on_sched_round_start(self, job_id: str, round_idx: int) -> None:
         """A gated round began: sample every party's availability, schedule
-        the arrivals as simulator events, report the no-shows."""
+        the arrivals as simulator events, report the no-shows.
+
+        On the vectorized path the round comes out of the job's presampled
+        philox grid as arrays and goes to ``begin_round_presampled`` whole —
+        no per-arrival events. The recorder still sees every (party, round)
+        sample in party order, same as the scalar loop below and the engine
+        vehicle, so conformance arrival logs stay comparable."""
         sched = self.scheduler
+        sampler = self._samplers.get(job_id) if self.vectorized else None
+        if sampler is not None:
+            train, comm, noshow = sampler.round_view(round_idx)
+            if self.recorder is not None:
+                for i, pid in enumerate(sampler.party_ids):
+                    self.recorder(
+                        job_id, pid, round_idx,
+                        None if noshow[i]
+                        else (float(train[i]), float(comm[i])))
+            idx = np.nonzero(~noshow)[0]
+            t_train = train[idx]
+            times = self.sim.now + t_train + comm[idx]
+            order = np.argsort(times, kind="stable")
+            sched.begin_round_presampled(
+                job_id, times[order], idx, t_train,
+                int(noshow.sum()))
+            return
         arrivals = []
         no_shows = 0
         for pid, party in self.parties[job_id].items():

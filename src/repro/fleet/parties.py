@@ -90,18 +90,62 @@ class MeasuredParty:
         return self._rounds[round_idx].get(self.party_id)
 
 
-def build_parties(job: JobTrace, base_seed: int = 0) -> Dict[str, object]:
-    """One party process per trace party, with deterministic RNG streams
-    derived from (base_seed, job.seed, party index)."""
+class CounterStreamParty:
+    """One party backed by a shared per-job ``PhiloxPartySampler`` grid
+    (``rng="philox"``).
+
+    Presents the same ``sample_round`` interface as ``SimulatedParty`` —
+    the engine vehicle and conformance recorder call it scalar-wise — but
+    the values come from the job's presampled (party x round) grid, the
+    very same arrays the vectorized ``FleetRunner`` path reads in bulk.
+    One object per party keeps the per-party-stream framing (and the
+    party's index into the grid); there is no per-object RNG state.
+    """
+
+    def __init__(self, party_id: str, index: int, sampler):
+        self.party_id = party_id
+        self.index = index
+        self.sampler = sampler  # PhiloxPartySampler, shared across the job
+
+    def sample_round(self, round_idx: int, round_start_s: float
+                     ) -> Optional[Tuple[float, float]]:
+        return self.sampler.sample(self.index, round_idx)
+
+
+def build_party_processes(
+    job: JobTrace, base_seed: int = 0, rng: str = "pcg64",
+) -> Tuple[Dict[str, object], Optional[object]]:
+    """Party processes for one job, plus the shared sampler (philox only).
+
+    ``rng="pcg64"`` (default) is the original scheme — one sequential
+    ``np.random.default_rng((base_seed, job.seed, i))`` stream per party,
+    kept as the default so existing traces and goldens stay bit-identical.
+    ``rng="philox"`` presamples the whole job on counter-based streams
+    (``repro.fleet.streams``), enabling the vectorized fleet fast path;
+    the second return value is then the job's ``PhiloxPartySampler``.
+    Measured jobs replay exactly under either setting.
+    """
     if job.measured_rounds:
-        return {
-            pid: MeasuredParty(pid, job.measured_rounds)
-            for pid in job.party_ids
-        }
-    return {
+        return ({pid: MeasuredParty(pid, job.measured_rounds)
+                 for pid in job.party_ids}, None)
+    if rng == "philox":
+        from repro.fleet.streams import PhiloxPartySampler
+        sampler = PhiloxPartySampler(job, base_seed)
+        return ({pid: CounterStreamParty(pid, i, sampler)
+                 for i, pid in enumerate(job.parties)}, sampler)
+    if rng != "pcg64":
+        raise ValueError(f"rng must be 'pcg64' or 'philox', got {rng!r}")
+    return ({
         pid: SimulatedParty(pid, pat, seed=(base_seed, job.seed, i))
         for i, (pid, pat) in enumerate(job.parties.items())
-    }
+    }, None)
+
+
+def build_parties(job: JobTrace, base_seed: int = 0,
+                  rng: str = "pcg64") -> Dict[str, object]:
+    """One party process per trace party, with deterministic RNG streams
+    derived from (base_seed, job.seed, party index)."""
+    return build_party_processes(job, base_seed, rng)[0]
 
 
 class FleetArrivalSource(ArrivalSource):

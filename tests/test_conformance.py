@@ -22,6 +22,7 @@ from repro.fleet.conformance import (
     default_matrix,
     long_horizon_matrix,
     run_cell,
+    vectorized_matrix,
 )
 from repro.fleet.fleet import FleetResult
 
@@ -59,6 +60,25 @@ def test_conformance_matrix_cell(cell_name):
     # <= 40% of eager-AO container-seconds (>= 60% savings)
     if spec.tier == "default":
         assert report.savings_pct() >= 60.0
+
+
+# --------------------------------------------------------------------------
+# the vectorized (rng="philox") matrix: the scale path must hold the same
+# paired invariants — the scheduler vehicle runs the presampled fast path
+# while the engine baselines walk the identical counter-stream grids
+# per-event, so arrival parity here IS the fast-path equivalence claim
+# --------------------------------------------------------------------------
+_VEC_MATRIX = {spec.name: spec for spec in vectorized_matrix()}
+
+
+@pytest.mark.parametrize("cell_name", sorted(_VEC_MATRIX))
+def test_conformance_vectorized_cell(cell_name):
+    spec = _VEC_MATRIX[cell_name]
+    assert spec.rng == "philox" and spec.name.endswith("-philox")
+    report = run_cell(spec)
+    assert report.passed, report.failures
+    assert set(report.runs) == set(CONFORMANCE_STRATEGIES)
+    assert report.savings_pct() >= 60.0
 
 
 @pytest.mark.slow

@@ -154,3 +154,151 @@ def test_always_on_container_bills_lifetime():
     dur = ao.shutdown()
     assert dur == pytest.approx(100.0)
     assert cl.container_seconds_by_job["job"] == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# fast-path event core: O(1) pending, lazy-deletion compaction, n_processed
+# ---------------------------------------------------------------------------
+def test_pending_counter_tracks_schedule_cancel_and_run():
+    sim = Simulator()
+    assert sim.pending == 0
+    handles = [sim.schedule(float(i), lambda: None) for i in range(5)]
+    assert sim.pending == 5
+    handles[0].cancel()
+    handles[1].cancel()
+    assert sim.pending == 3
+    sim.run(until=2.5)
+    assert sim.pending == 2  # t=3 and t=4 remain live
+    sim.run()
+    assert sim.pending == 0
+    assert sim.n_processed == 3  # cancelled events never execute
+
+
+def test_cancel_is_idempotent_and_safe_after_execution():
+    sim = Simulator()
+    ran = []
+    h = sim.schedule(1.0, lambda: ran.append(1))
+    h.cancel()
+    h.cancel()  # double-cancel must not double-decrement
+    assert sim.pending == 0
+    sim.run()
+    assert ran == []
+    # cancelling an event that already executed is a no-op on the counter
+    h2 = sim.schedule(1.0, lambda: ran.append(2))
+    sim.run()
+    assert ran == [2] and sim.pending == 0
+    h2.cancel()
+    assert h2.cancelled and sim.pending == 0
+    # and new scheduling still behaves after all of the above
+    sim.schedule(1.0, lambda: ran.append(3))
+    sim.run()
+    assert ran == [2, 3]
+
+
+def test_cancel_heavy_workload_compacts_the_heap():
+    """Cancelled entries are physically removed once they dominate the
+    heap (> _COMPACT_MIN_CANCELLED and > half the entries) — the
+    one-deadline-timer-per-round-per-job pattern at fleet scale."""
+    sim = Simulator()
+    live = [sim.schedule(1e6 + i, lambda: None) for i in range(10)]
+    doomed = [sim.schedule(float(i), lambda: None) for i in range(200)]
+    assert len(sim._heap) == 210
+    for h in doomed:
+        h.cancel()
+    # compaction triggered mid-loop: only live entries remain
+    assert len(sim._heap) < 210
+    assert sim._cancelled * 2 <= len(sim._heap) or sim._cancelled <= 64
+    assert sim.pending == 10
+    sim.run()
+    assert sim.n_processed == 10
+    assert all(not h.cancelled for h in live)
+
+
+def test_compaction_preserves_ordering():
+    """Re-heapifying around the survivors must not perturb run order."""
+    sim = Simulator()
+    seen = []
+    for i in range(300):
+        h = sim.schedule(float(300 - i), lambda i=i: seen.append(i))
+        if i % 5 != 0:
+            h.cancel()
+    sim.run()
+    # survivors are i = 0, 5, ..., 295 at times 300-i: time order means
+    # descending i
+    assert seen == list(range(295, -1, -5))
+    assert sim.pending == 0 and sim._cancelled == 0
+
+
+def test_n_processed_counts_executed_events_only():
+    sim = Simulator()
+    for i in range(4):
+        sim.schedule(float(i), lambda: None)
+    sim.schedule(10.0, lambda: None).cancel()
+    sim.run()
+    assert sim.n_processed == 4
+    sim.schedule(1.0, lambda: None)
+    sim.run()
+    assert sim.n_processed == 5  # lifetime counter, never reset
+
+
+# ---------------------------------------------------------------------------
+# bounded occupancy recording (fleet-scale memory satellite)
+# ---------------------------------------------------------------------------
+def test_occupancy_merges_same_timestamp_deltas():
+    sim = Simulator()
+    cl = Cluster(sim, ClusterConfig())
+    cl.note_container(5.0, +1)
+    cl.note_container(5.0, +1)
+    assert cl.occupancy_events == [(5.0, 2)]
+    cl.note_container(5.0, -2)  # net-zero entries vanish entirely
+    assert cl.occupancy_events == []
+    cl.note_container(6.0, +1)
+    cl.note_container(7.0, -1)
+    assert cl.occupancy_events == [(6.0, 1), (7.0, -1)]
+
+
+def test_occupancy_resolution_buckets_event_times():
+    sim = Simulator()
+    cl = Cluster(sim, ClusterConfig(occupancy_resolution_s=10.0))
+    cl.note_container(3.0, +1)   # bucket 0
+    cl.note_container(9.9, +1)   # bucket 0 -> merges
+    cl.note_container(12.0, -1)  # bucket 10
+    cl.note_container(25.0, -1)  # bucket 20
+    assert cl.occupancy_events == [(0.0, 2), (10.0, -1), (20.0, -1)]
+    assert sum(d for _, d in cl.occupancy_events) == 0
+
+
+def test_occupancy_opt_out_records_nothing_but_billing_survives():
+    sim = Simulator()
+    cfg = ClusterConfig(deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=0.0, record_occupancy=False)
+    cl = Cluster(sim, cfg)
+    done = []
+    cl.submit("job", priority=0.0, work_s=10.0, on_complete=done.append)
+    sim.run()
+    assert done and cl.occupancy_events == []
+    assert cl.container_seconds == pytest.approx(10.0)
+
+
+def test_occupancy_resolution_bounds_fleet_event_list():
+    """With bucketing on, a long run's occupancy list stays bounded while
+    the binned utilization timeline still integrates to the same billing."""
+    from repro.api import Platform
+    from repro.core import AggregationEstimator
+    from repro.fleet.traces import synthetic_fleet
+
+    trace = synthetic_fleet(6, "mixed", seed=3)
+    results = {}
+    for res in (0.0, 60.0):
+        platform = Platform(
+            ClusterConfig(capacity=8, occupancy_resolution_s=res),
+            AggregationEstimator(t_pair_s=0.05))
+        runner = platform.submit_fleet(trace, strategy="jit")
+        platform.run()
+        assert runner.all_done
+        results[res] = (len(platform.cluster.occupancy_events),
+                        runner.result().fleet.container_seconds)
+    n_exact, cs_exact = results[0.0]
+    n_coarse, cs_coarse = results[60.0]
+    assert n_coarse < n_exact  # bucketing actually merged entries
+    assert cs_coarse == cs_exact  # billing is independent of recording

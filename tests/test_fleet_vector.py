@@ -1,0 +1,293 @@
+"""Vectorized fleet sampling (``rng="philox"``) + the scheduler fast path.
+
+Three locks, layered:
+
+  1. the numpy-vectorized Philox4x64-10 kernel is bit-identical to
+     ``np.random.Philox`` (the stream scheme is exactly what it claims);
+  2. the presampled (party x round) grids equal an independent scalar
+     re-derivation (``reference_sample``) on every availability pattern —
+     deterministic sweep + hypothesis property;
+  3. the vectorized scheduler path (presampled rounds, analytic drain
+     triggers, batch predictor) produces metrics EXACTLY equal to the
+     per-event path run on the same philox streams — latencies, lateness,
+     predictions, billing, deploy counts, all of it.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # optional hypothesis shim
+
+from repro.api import Platform
+from repro.core import AggregationEstimator, ClusterConfig
+from repro.core.prediction import UpdatePredictor, VectorizedUpdatePredictor
+from repro.fleet.parties import (
+    CounterStreamParty,
+    SimulatedParty,
+    build_parties,
+    build_party_processes,
+)
+from repro.fleet.streams import (
+    PhiloxPartySampler,
+    party_keys,
+    philox4x64,
+    reference_sample,
+)
+from repro.fleet.traces import MIXED_PATTERNS, synthetic_fleet
+
+ALL_PATTERNS = MIXED_PATTERNS  # steady/diurnal/straggler/intermittent/dropout
+
+
+# --------------------------------------------------------------------------
+# 1. the Philox kernel itself
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("key", [(0, 0), (1, 2), (2**64 - 1, 17),
+                                 (123456789, 987654321)])
+def test_philox_kernel_matches_numpy(key):
+    """Our uint64-vectorized Philox4x64-10 emits numpy's exact stream:
+    ``np.random.Philox(key=...)`` increments the counter BEFORE generating,
+    so its first block is counter=1."""
+    raw = np.random.Philox(
+        key=np.array(key, dtype=np.uint64)).random_raw(12)
+    k0 = np.array([key[0]], dtype=np.uint64)
+    k1 = np.array([key[1]], dtype=np.uint64)
+    zero = np.zeros(1, dtype=np.uint64)
+    got = []
+    for ctr in (1, 2, 3):
+        c0 = np.array([ctr], dtype=np.uint64)
+        got.extend(int(w[0]) for w in philox4x64(c0, zero, zero, zero,
+                                                 k0, k1))
+    assert got == list(raw)
+
+
+def test_philox_kernel_vectorizes_consistently():
+    """A (P, R) batched evaluation equals P*R scalar evaluations — the
+    whole point of the counter-based scheme."""
+    rng = np.random.default_rng(5)
+    P, R = 7, 11
+    k0 = rng.integers(0, 2**64, size=(P, 1), dtype=np.uint64)
+    k1 = rng.integers(0, 2**64, size=(P, 1), dtype=np.uint64)
+    c0 = np.broadcast_to(np.arange(R, dtype=np.uint64), (P, R)).copy()
+    zero = np.zeros((P, R), dtype=np.uint64)
+    batch = philox4x64(c0, zero, zero, zero,
+                       zero + k0, zero + k1)
+    z1 = np.zeros(1, dtype=np.uint64)
+    for i in range(P):
+        for r in range(R):
+            one = philox4x64(np.array([r], dtype=np.uint64), z1, z1, z1,
+                             k0[i], k1[i])
+            for w_batch, w_one in zip(batch, one):
+                assert w_batch[i, r] == w_one[0]
+
+
+def test_party_keys_deterministic_and_distinct():
+    a = party_keys(3, 9, 16)
+    assert a.shape == (16, 2)
+    assert np.array_equal(a, party_keys(3, 9, 16))
+    assert len({tuple(k) for k in a}) == 16  # per-party streams distinct
+    assert not np.array_equal(a, party_keys(4, 9, 16))
+    assert not np.array_equal(a, party_keys(3, 8, 16))
+
+
+# --------------------------------------------------------------------------
+# 2. grids == independent scalar oracle, every pattern
+# --------------------------------------------------------------------------
+def _assert_grid_matches_oracle(pattern, seed, base_seed):
+    trace = synthetic_fleet(3, pattern, seed=seed)
+    for job in trace.jobs:
+        sampler = PhiloxPartySampler(job, base_seed)
+        for i in range(len(job.parties)):
+            for r in range(job.rounds):
+                got = sampler.sample(i, r)
+                ref = reference_sample(job, base_seed, i, r)
+                assert got == ref, (pattern, job.job_id, i, r)
+
+
+@pytest.mark.parametrize("pattern", ALL_PATTERNS + ("mixed",))
+def test_grid_matches_reference_oracle(pattern):
+    _assert_grid_matches_oracle(pattern, seed=11, base_seed=0)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       base_seed=st.integers(min_value=0, max_value=2**31 - 1),
+       pattern=st.sampled_from(ALL_PATTERNS))
+@settings(max_examples=25, deadline=None)
+def test_grid_matches_reference_oracle_property(seed, base_seed, pattern):
+    """Satellite (c): the vectorized sampler reproduces the scalar
+    per-(party, round) derivation exactly for ANY seed, on all five
+    availability patterns."""
+    _assert_grid_matches_oracle(pattern, seed=seed, base_seed=base_seed)
+
+
+def test_dropout_pattern_produces_no_shows():
+    trace = synthetic_fleet(3, "dropout", seed=1)
+    sampler = PhiloxPartySampler(trace.jobs[0], 0)
+    assert sampler.noshow.any(), "20% dropout grid should contain no-shows"
+    assert not sampler.noshow.all()
+    # steady grids never no-show (dropout_prob == 0 short-circuits)
+    steady = PhiloxPartySampler(synthetic_fleet(1, "steady", seed=1).jobs[0],
+                                0)
+    assert not steady.noshow.any()
+
+
+def test_counter_stream_party_reads_the_shared_grid():
+    trace = synthetic_fleet(2, "mixed", seed=4)
+    job = trace.jobs[0]
+    parties, sampler = build_party_processes(job, base_seed=0, rng="philox")
+    assert sampler is not None
+    assert list(parties) == list(job.parties)
+    for i, (pid, party) in enumerate(parties.items()):
+        assert isinstance(party, CounterStreamParty)
+        assert party.sampler is sampler
+        for r in range(job.rounds):
+            assert party.sample_round(r, 123.4) == sampler.sample(i, r)
+    with pytest.raises(IndexError):
+        sampler.sample(0, job.rounds)
+
+
+def test_build_parties_rng_validation_and_default():
+    trace = synthetic_fleet(1, "steady", seed=0)
+    legacy = build_parties(trace.jobs[0], 0)
+    assert all(isinstance(p, SimulatedParty) for p in legacy.values())
+    with pytest.raises(ValueError, match="rng"):
+        build_parties(trace.jobs[0], 0, rng="mt19937")
+
+
+# --------------------------------------------------------------------------
+# predictor: array EWMA == scalar PeriodicTracker feed
+# --------------------------------------------------------------------------
+def test_vectorized_predictor_matches_scalar():
+    trace = synthetic_fleet(4, "mixed", seed=7)
+    rng = np.random.default_rng(0)
+    for jt in trace.jobs:
+        spec = jt.to_jobspec()
+        scalar = UpdatePredictor(spec)
+        vec = VectorizedUpdatePredictor(spec)
+        assert vec.t_rnd() == scalar.t_rnd()  # declared-only estimates
+        pids = list(spec.parties)
+        for _ in range(6):  # six rounds of observations
+            present = rng.random(len(pids)) > 0.2
+            idx = np.nonzero(present)[0]
+            times = rng.uniform(10.0, 200.0, size=len(idx))
+            for i, t in zip(idx, times):
+                scalar.observe_round(pids[i], float(t))
+            vec.observe_batch(idx, times)
+            assert vec.t_rnd() == scalar.t_rnd()
+            assert vec.per_party() == scalar.per_party()
+
+
+def test_vectorized_predictor_scalar_compat_and_validation():
+    spec = synthetic_fleet(1, "steady", seed=0).jobs[0].to_jobspec()
+    vec = VectorizedUpdatePredictor(spec)
+    scalar = UpdatePredictor(spec)
+    pid = list(spec.parties)[0]
+    for t in (50.0, 52.0, 51.0, 50.5):
+        vec.observe_round(pid, t)
+        scalar.observe_round(pid, t)
+    assert vec.t_rnd() == scalar.t_rnd()
+    bad = synthetic_fleet(1, "steady", seed=0).jobs[0].to_jobspec()
+    bad.sync_frequency = 4  # minibatch-sync: scalar predictor territory
+    with pytest.raises(ValueError, match="epoch-sync"):
+        VectorizedUpdatePredictor(bad)
+
+
+# --------------------------------------------------------------------------
+# 3. fast path == per-event path, exactly
+# --------------------------------------------------------------------------
+_METRIC_FIELDS = ("rounds_done", "round_latencies", "round_lateness",
+                  "predictions", "updates_received", "dropped_updates",
+                  "quorum_failures", "container_seconds", "n_deploys",
+                  "finished_at")
+
+
+def _run_fleet(trace, *, rng, vectorized, strategy="jit", capacity=8,
+               record=False):
+    log = []
+    platform = Platform(ClusterConfig(capacity=capacity),
+                        AggregationEstimator(t_pair_s=0.05))
+    runner = platform.submit_fleet(
+        trace, strategy=strategy, rng=rng, vectorized=vectorized,
+        recorder=(lambda j, p, r, s: log.append((j, p, r, s)))
+        if record else None)
+    platform.run()
+    assert runner.all_done
+    return runner, log
+
+
+@pytest.mark.parametrize("pattern", ("mixed", "dropout", "intermittent"))
+def test_fast_path_matches_event_path_exactly(pattern):
+    """The tentpole lock: rng="philox" with and without the vectorized
+    fast path yields bit-identical per-job metrics — the analytic drain
+    triggers fire at exactly the times the per-arrival events would have
+    submitted drains."""
+    trace = synthetic_fleet(6, pattern, seed=5)
+    slow, _ = _run_fleet(trace, rng="philox", vectorized=False)
+    fast, _ = _run_fleet(trace, rng="philox", vectorized=True)
+    ms, mf = slow.metrics(), fast.metrics()
+    assert set(ms) == set(mf)
+    for job_id in ms:
+        for field in _METRIC_FIELDS:
+            assert getattr(ms[job_id], field) == \
+                getattr(mf[job_id], field), (job_id, field)
+    assert slow.result().fleet.container_seconds == \
+        fast.result().fleet.container_seconds
+    # and the fast run scheduled far fewer simulator events
+    assert fast.sim.n_processed < slow.sim.n_processed
+
+
+def test_fast_path_cross_vehicle_arrival_parity():
+    """The paired-stream guarantee on the scale path: the vectorized
+    scheduler vehicle and the scalar engine vehicle record identical
+    (job, party, round) availability sequences from the shared grids."""
+    trace = synthetic_fleet(5, "mixed", seed=2)
+    _, jit_log = _run_fleet(trace, rng="philox", vectorized=True,
+                            record=True)
+    _, ao_log = _run_fleet(trace, rng="philox", vectorized=False,
+                           strategy="eager_ao", record=True)
+    assert sorted(jit_log) == sorted(ao_log)
+    assert any(s is None for *_, s in jit_log)  # dropouts recorded too
+
+
+def test_vectorized_requires_philox():
+    trace = synthetic_fleet(1, "steady", seed=0)
+    platform = Platform(ClusterConfig(capacity=8),
+                        AggregationEstimator(t_pair_s=0.05))
+    with pytest.raises(ValueError, match="philox"):
+        platform.submit_fleet(trace, rng="pcg64", vectorized=True)
+
+
+def test_measured_jobs_fall_back_to_event_path_under_philox():
+    """Measured traces replay exactly on either rng setting — the
+    vectorized runner routes them through the per-event path."""
+    from repro.fleet.conformance import pseudo_measured_export
+    from repro.fleet.traces import fleet_from_measured
+
+    spec, measured = pseudo_measured_export(seed=3)
+    trace = fleet_from_measured(spec, measured, n_jobs=2)
+    a, _ = _run_fleet(trace, rng="pcg64", vectorized=False)
+    b, _ = _run_fleet(trace, rng="philox", vectorized=True)
+    ma, mb = a.metrics(), b.metrics()
+    for job_id in ma:
+        for field in _METRIC_FIELDS:
+            assert getattr(ma[job_id], field) == \
+                getattr(mb[job_id], field), (job_id, field)
+
+
+def test_default_rng_is_pcg64_and_bit_stable():
+    """The default scheme stays the sequential per-party PCG64 stream:
+    golden container-seconds on the default 16-job fleet are the PR 4/5
+    values, untouched by the fast-path refactor."""
+    trace = synthetic_fleet(16, "mixed", seed=0)
+    jit, _ = _run_fleet(trace, rng="pcg64", vectorized=None)
+    ao, _ = _run_fleet(trace, rng="pcg64", vectorized=None,
+                       strategy="eager_ao")
+    assert round(jit.result().fleet.container_seconds, 1) == 384.6
+    assert round(ao.result().fleet.container_seconds, 1) == 28803.8
+
+
+def test_unknown_rng_fails_at_submit_not_mid_run():
+    """Fail-fast: a bad rng name raises at submit_fleet construction, not
+    later inside a scheduled _submit event."""
+    trace = synthetic_fleet(1, "steady", seed=0)
+    platform = Platform(ClusterConfig(capacity=8),
+                        AggregationEstimator(t_pair_s=0.05))
+    with pytest.raises(ValueError, match="unknown fleet rng"):
+        platform.submit_fleet(trace, rng="mt19937")

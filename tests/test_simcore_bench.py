@@ -1,0 +1,119 @@
+"""``benchmarks/simcore.py`` — the simulator self-benchmark.
+
+Fast tier: the smoke (small) cell's deterministic columns are
+golden-locked against the committed baseline, and the --check regression
+guard's pass/fail logic is exercised on synthetic rows. Slow tier: the
+large-cell >=10x speedup floor and the 5,000-job acceptance criterion.
+"""
+import json
+
+import pytest
+
+from benchmarks import simcore
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    """One real smoke run (small cell, legacy + fast), shared by the
+    deterministic-column and check-guard tests below (~1 s)."""
+    return simcore.run(smoke=True)
+
+
+def _baseline():
+    import pathlib
+
+    path = pathlib.Path(simcore.__file__).parent / "simcore_baseline.json"
+    return json.loads(path.read_text())
+
+
+def test_smoke_rows_schema_and_shape(smoke):
+    rows, sp = smoke
+    assert [(r["cell"], r["mode"]) for r in rows] == \
+        [("small", "legacy"), ("small", "fast")]
+    for r in rows:
+        for col in simcore.HEADER.split(","):
+            assert col in r, col
+        assert r["wall_s"] > 0 and r["arrivals_per_sec"] > 0
+        assert r["peak_rss_kb"] > 0
+    assert set(sp) == {"small"} and sp["small"] > 0
+
+
+def test_smoke_deterministic_columns_match_committed_baseline(smoke):
+    """The golden lock: simulated-work columns must reproduce the
+    committed ``benchmarks/simcore_baseline.json`` exactly. A diff here
+    means the benchmark is no longer measuring the same workload (or a
+    fast-path change altered WHAT is simulated, not just how fast)."""
+    rows, _ = smoke
+    base = {(r["cell"], r["mode"]): r for r in _baseline()["rows"]}
+    for r in rows:
+        b = base[(r["cell"], r["mode"])]
+        for col in ("n_jobs", "parties_per_job", "rounds_per_job",
+                    "arrivals", "events"):
+            assert r[col] == b[col], (r["mode"], col)
+
+
+def test_fast_mode_runs_far_fewer_events_for_same_arrivals(smoke):
+    rows, _ = smoke
+    legacy, fast = rows
+    assert fast["arrivals"] == legacy["arrivals"]
+    # batched round scheduling: >=2x fewer simulator events even on the
+    # small cell (the large cell is ~35x; see the baseline)
+    assert fast["events"] * 2 < legacy["events"]
+
+
+def test_check_against_passes_on_self(tmp_path, smoke):
+    rows, sp = smoke
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"rows": rows, "speedups": sp}))
+    simcore.check_against(str(path), rows, sp)  # must not raise
+
+
+def test_check_against_fails_on_determinism_drift(tmp_path, smoke):
+    rows, sp = smoke
+    broken = [dict(r) for r in rows]
+    broken[0]["arrivals"] += 1
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"rows": broken, "speedups": sp}))
+    with pytest.raises(SystemExit):
+        simcore.check_against(str(path), rows, sp)
+
+
+def test_check_against_fails_on_speedup_regression(tmp_path, smoke):
+    """The CI guard trips when the measured fast/legacy ratio drops more
+    than 30% below the committed baseline ratio."""
+    rows, sp = smoke
+    inflated = {k: v / simcore.CHECK_SPEEDUP_FRACTION * 1.01
+                for k, v in sp.items()}
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"rows": rows, "speedups": inflated}))
+    with pytest.raises(SystemExit):
+        simcore.check_against(str(path), rows, sp)
+    # tolerated drift (well within 30%) passes
+    mild = {k: v * 1.1 for k, v in sp.items()}
+    path.write_text(json.dumps({"rows": rows, "speedups": mild}))
+    simcore.check_against(str(path), rows, sp)
+
+
+def test_speedups_math():
+    rows = [
+        {"cell": "small", "mode": "legacy", "arrivals_per_sec": 100.0},
+        {"cell": "small", "mode": "fast", "arrivals_per_sec": 250.0},
+        {"cell": "large", "mode": "legacy", "arrivals_per_sec": 10.0},
+    ]
+    assert simcore.speedups(rows) == {"small": 2.5}  # large: no fast row
+
+
+@pytest.mark.slow
+def test_large_cell_meets_speedup_floor():
+    """ISSUE 7 acceptance: >=10x on the large cell. run() itself raises
+    SystemExit below the floor, so completing IS the assertion."""
+    rows, sp = simcore.run(smoke=False)
+    assert sp["large"] >= simcore.LARGE_SPEEDUP_FLOOR
+
+
+@pytest.mark.slow
+def test_acceptance_5000_job_trace_under_ten_minutes():
+    row = simcore.run_acceptance_row()
+    assert row["wall_s"] < 600.0
+    # 5,000 jobs over the default small/medium/large mix: ~290k arrivals
+    assert row["arrivals"] > 250_000

@@ -34,23 +34,36 @@ tests/test_online.py:
                           pool — what autoscaling saves in RESERVED
                           capacity even before per-task billing
 
-  python -m benchmarks.online [--smoke] [--full] [--out BENCH_online.json]
+A second golden cell, ``saturation``, removes admission relief entirely
+(nothing queues or sheds) and caps the pool well below demand: the only
+protection left is §5.5 class-rank pool scheduling. ``jit-classed``
+holds gold inside its 60s band while silver/best_effort absorb the
+preemptions; ``jit-classless`` (identical stream, every rank zeroed)
+shows gold blowing the band without priorities.
 
---smoke is the CI per-PR cell (one burst period, 18 jobs, seconds of
-wall-clock); --full adds the long scenario (repeated trace cycles, two
-diurnal periods of burst) that the nightly tier runs.
+  python -m benchmarks.online [--smoke] [--full] [--out BENCH_online.json]
+                              [--classes-out report.json]
+
+--smoke is the CI per-PR tier (the burst cell + the saturation cell,
+seconds of wall-clock); --full adds the long scenario (repeated trace
+cycles, two diurnal periods of burst) that the nightly tier runs.
+--classes-out writes the per-class lateness/preemption report the
+nightly conformance job uploads as an artifact.
 
 CSV: variant,strategy,scenario,arrived,admitted,queued,shed,rounds,
      makespan_s,container_seconds,cost_usd,pool_container_seconds,
      peak_pool,scale_ups,scale_downs,p50_latency_s,p95_latency_s,
      gold_p95_lateness_s,gold_band_s,gold_attained,silver_p95_lateness_s,
-     best_effort_shed,windows,savings_vs_ao_pct,pool_savings_vs_fixed_pct
+     best_effort_shed,gold_preemptions,silver_preemptions,
+     best_effort_preemptions,windows,savings_vs_ao_pct,
+     pool_savings_vs_fixed_pct
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.api import Platform
@@ -67,21 +80,6 @@ from repro.online import (
 #: because the stream (and therefore the index order) is identical
 SLA_CYCLE: Tuple[str, ...] = ("gold", "silver", "best_effort")
 
-#: The declared lateness bands for THIS scenario. The default ladder's
-#: 60s gold band assumes calibrated steady fleets; the burst scenario
-#: runs stress fuse times (t_pair 2s) over parties whose declared train
-#: times miss the truth by up to 40%, so rounds overrun their §5.5
-#: deadlines by minutes regardless of admission class. Bands are the
-#: deterministic observed p95 with ~1.5x headroom, golden-locked in
-#: tests/test_online.py.
-SCENARIO_SLA_CLASSES = {
-    "gold": dataclasses.replace(
-        SLA_CLASSES["gold"], lateness_p95_band_s=240.0),
-    "silver": dataclasses.replace(
-        SLA_CLASSES["silver"], lateness_p95_band_s=900.0),
-    "best_effort": SLA_CLASSES["best_effort"],
-}
-
 #: the statically provisioned pool the fixed variants run on, sized for
 #: the burst peak (the default fleet tier capacity)
 FIXED_POOL = 8
@@ -93,7 +91,7 @@ STRESS_T_PAIR_S = 2.0
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One open-loop burst scenario (everything seeded/deterministic)."""
+    """One open-loop scenario (everything seeded/deterministic)."""
 
     name: str
     n_jobs: int = 18
@@ -103,9 +101,29 @@ class Scenario:
     mean_interarrival_s: float = 120.0
     diurnal_period_s: float = 2400.0
     diurnal_amplitude: float = 0.3
-    #: (start_s, len_s, factor): rate x3 for one diurnal period
-    burst: Tuple[float, float, float] = (800.0, 2400.0, 3.0)
+    #: (start_s, len_s, factor): rate x3 for one diurnal period; None for
+    #: a sustained (burst-free) stream
+    burst: Optional[Tuple[float, float, float]] = (800.0, 2400.0, 3.0)
     window_s: float = 600.0
+    t_pair_s: float = STRESS_T_PAIR_S
+    #: front-door admission knobs; the saturation cell sets burst_arrivals
+    #: beyond the arrival count so NOTHING queues or sheds — class-aware
+    #: pool priorities must do all the protecting
+    burst_window_s: float = 300.0
+    burst_arrivals: int = 4
+    #: pool caps for the autoscaled variants (fixed variants provision
+    #: max_capacity, the burst-peak size)
+    min_capacity: int = 1
+    max_capacity: int = FIXED_POOL
+    #: declared §5.5 lateness bands for this scenario. The default
+    #: ladder's 60s gold band assumes calibrated steady fleets; the burst
+    #: scenarios run stress fuse times (t_pair 2s) over parties whose
+    #: declared train times miss the truth by up to 40%, so rounds
+    #: overrun their deadlines by minutes regardless of admission class —
+    #: their bands are the deterministic observed p95 with ~1.5x
+    #: headroom, golden-locked in tests/test_online.py.
+    gold_band_s: float = 240.0
+    silver_band_s: float = 900.0
 
     def stream(self) -> TraceStream:
         trace = synthetic_fleet(self.n_jobs, self.pattern, seed=self.seed)
@@ -117,11 +135,53 @@ class Scenario:
             burst=self.burst, seed=self.seed, repeat=self.repeat,
         )
 
+    def sla_classes(self, classless: bool = False) -> Dict:
+        """This scenario's ladder. ``classless`` zeroes every rank and
+        weight (pure-deadline pool scheduling, the pre-priorities
+        behavior) while keeping the admission flags identical, so the
+        classed/classless comparison stays paired at the front door."""
+        ladder = {
+            "gold": dataclasses.replace(
+                SLA_CLASSES["gold"], lateness_p95_band_s=self.gold_band_s),
+            "silver": dataclasses.replace(
+                SLA_CLASSES["silver"],
+                lateness_p95_band_s=self.silver_band_s),
+            "best_effort": SLA_CLASSES["best_effort"],
+        }
+        if classless:
+            ladder = {n: dataclasses.replace(c, rank=0, backlog_weight=1.0)
+                      for n, c in ladder.items()}
+        return ladder
+
 
 SMOKE = Scenario(name="burst-3x")
+#: The nightly cell: repeated trace cycles under two diurnal periods of
+#: 3x burst, heavy drains (t_pair 6s) on a pool capped well below burst
+#: demand — the sustained-overload regime where admission control alone
+#: cannot protect gold. Class-rank pool priorities hold gold near its
+#: calibration floor (~455s of declared-train-time error intrinsic to
+#: the mixed pattern — no scheduling policy can remove it, hence the
+#: 700s band) while the same stream with ranks zeroed melts down to a
+#: gold p95 in the hours (guarded in tests/test_online.py slow tier).
 LONG = Scenario(name="burst-3x-long", n_jobs=16, repeat=3, seed=1,
                 mean_interarrival_s=90.0, diurnal_period_s=3600.0,
-                burst=(1200.0, 7200.0, 3.0))
+                burst=(1200.0, 7200.0, 3.0), t_pair_s=6.0,
+                max_capacity=3, gold_band_s=700.0)
+#: Pool saturation without admission relief: a sustained high-rate stream
+#: (no burst window — burst_arrivals is set beyond the arrival count, so
+#: every job admits immediately and nothing queues or sheds) onto a pool
+#: capped well below demand. The ONLY thing separating the classes is
+#: §5.5 class-rank pool scheduling: gold drains jump the queue and
+#: preempt running best_effort drains. The jit-classless variant runs the
+#: identical stream with every rank zeroed — gold then waits like
+#: everyone else and blows its 60s band (both outcomes golden-locked in
+#: tests/test_online.py).
+SATURATION = Scenario(name="saturation", n_jobs=24, pattern="steady",
+                      seed=0, mean_interarrival_s=25.0,
+                      diurnal_amplitude=0.0, burst=None, t_pair_s=6.0,
+                      burst_arrivals=10_000, min_capacity=1,
+                      max_capacity=2, gold_band_s=60.0,
+                      silver_band_s=math.inf)
 
 VARIANTS: Tuple[Tuple[str, str, bool], ...] = (
     # (variant, strategy, autoscaled)
@@ -130,11 +190,21 @@ VARIANTS: Tuple[Tuple[str, str, bool], ...] = (
     ("eager_ao-fixed", "eager_ao", False),
 )
 
+#: the saturation cell's variants: classed vs classless JIT under the
+#: identical stream, plus the always-on baseline for the savings floor
+SATURATION_VARIANTS: Tuple[Tuple[str, str, bool, bool], ...] = (
+    # (variant, strategy, autoscaled, classless)
+    ("jit-classed", "jit", True, False),
+    ("jit-classless", "jit", True, True),
+    ("eager_ao-fixed", "eager_ao", False, False),
+)
+
 HEADER = ("variant,strategy,scenario,arrived,admitted,queued,shed,rounds,"
           "makespan_s,container_seconds,cost_usd,pool_container_seconds,"
           "peak_pool,scale_ups,scale_downs,p50_latency_s,p95_latency_s,"
           "gold_p95_lateness_s,gold_band_s,gold_attained,"
-          "silver_p95_lateness_s,best_effort_shed,windows,"
+          "silver_p95_lateness_s,best_effort_shed,gold_preemptions,"
+          "silver_preemptions,best_effort_preemptions,windows,"
           "savings_vs_ao_pct,pool_savings_vs_fixed_pct")
 
 
@@ -143,22 +213,25 @@ def assign_sla(jt, idx: int) -> str:
 
 
 def serve_variant(scenario: Scenario, variant: str, strategy: str,
-                  autoscaled: bool) -> Dict:
-    """Run one variant of the burst scenario to quiescence."""
+                  autoscaled: bool, classless: bool = False) -> Dict:
+    """Run one variant of the scenario to quiescence."""
     platform = Platform(
-        ClusterConfig(capacity=2 if autoscaled else FIXED_POOL),
-        AggregationEstimator(t_pair_s=STRESS_T_PAIR_S),
+        ClusterConfig(capacity=2 if autoscaled else scenario.max_capacity),
+        AggregationEstimator(t_pair_s=scenario.t_pair_s),
     )
-    auto = (AutoscalerConfig(min_capacity=1, max_capacity=FIXED_POOL)
-            if autoscaled else AutoscalerConfig.fixed(FIXED_POOL))
+    auto = (AutoscalerConfig(min_capacity=scenario.min_capacity,
+                             max_capacity=scenario.max_capacity)
+            if autoscaled else AutoscalerConfig.fixed(scenario.max_capacity))
+    ladder = scenario.sla_classes(classless)
     svc = platform.serve(
         scenario.stream(), strategy=strategy, sla=assign_sla,
-        sla_classes=SCENARIO_SLA_CLASSES, autoscaler=auto,
-        admission=AdmissionConfig(burst_window_s=300.0, burst_arrivals=4),
+        sla_classes=ladder, autoscaler=auto,
+        admission=AdmissionConfig(burst_window_s=scenario.burst_window_s,
+                                  burst_arrivals=scenario.burst_arrivals),
         window_s=scenario.window_s,
     )
     report = svc.drain()
-    att = report.sla_attainment(SCENARIO_SLA_CLASSES)
+    att = report.sla_attainment(ladder)
     classes = report.classes
     arrived = sum(st.arrived for st in classes.values())
     admitted = sum(st.admitted for st in classes.values())
@@ -185,24 +258,34 @@ def serve_variant(scenario: Scenario, variant: str, strategy: str,
         "gold_p95_lateness_s": (
             None if gold["p95_lateness_s"] is None
             else round(gold["p95_lateness_s"], 3)),
-        "gold_band_s": SCENARIO_SLA_CLASSES["gold"].lateness_p95_band_s,
+        "gold_band_s": scenario.gold_band_s,
         "gold_attained": gold["attained"],
         "silver_p95_lateness_s": (
             None if att["silver"]["p95_lateness_s"] is None
             else round(att["silver"]["p95_lateness_s"], 3)),
         "best_effort_shed": classes["best_effort"].shed,
+        "gold_preemptions": classes["gold"].preemptions,
+        "silver_preemptions": classes["silver"].preemptions,
+        "best_effort_preemptions": classes["best_effort"].preemptions,
         "windows": len(report.windows),
     }
 
 
 def run(smoke: bool = False, full: bool = False) -> List[Dict]:
-    scenarios = [SMOKE] if not full else [SMOKE, LONG]
+    """Every cell emits rows keyed (scenario, variant). --smoke runs the
+    burst cell plus the saturation cell (both seconds of wall-clock);
+    --full adds the long repeated-cycle burst scenario (nightly)."""
+    four = [(v, s, a, False) for v, s, a in VARIANTS]
+    cells = [(SMOKE, four), (SATURATION, list(SATURATION_VARIANTS))]
+    if full:
+        cells.append((LONG, four))
     rows: List[Dict] = []
-    for scenario in scenarios:
-        cell = {v: serve_variant(scenario, v, s, a) for v, s, a in VARIANTS}
+    for scenario, variants in cells:
+        cell = {v: serve_variant(scenario, v, s, a, c)
+                for v, s, a, c in variants}
         ao = cell["eager_ao-fixed"]
         fixed_pool_cs = ao["pool_container_seconds"]
-        for variant, _, _ in VARIANTS:
+        for variant, _, _, _ in variants:
             row = cell[variant]
             ao_cs = ao["container_seconds"]
             row["savings_vs_ao_pct"] = round(
@@ -217,6 +300,27 @@ def run(smoke: bool = False, full: bool = False) -> List[Dict]:
     return rows
 
 
+def class_report(rows: List[Dict]) -> Dict:
+    """The per-class lateness/preemption report (the nightly conformance
+    job uploads this as an artifact): per (scenario, variant), each
+    class's p95 lateness vs band plus its preemption count."""
+    out: List[Dict] = []
+    for row in rows:
+        out.append({
+            "scenario": row["scenario"],
+            "variant": row["variant"],
+            "gold": {"p95_lateness_s": row["gold_p95_lateness_s"],
+                     "band_s": row["gold_band_s"],
+                     "attained": row["gold_attained"],
+                     "preemptions": row["gold_preemptions"]},
+            "silver": {"p95_lateness_s": row["silver_p95_lateness_s"],
+                       "preemptions": row["silver_preemptions"]},
+            "best_effort": {"shed": row["best_effort_shed"],
+                            "preemptions": row["best_effort_preemptions"]},
+        })
+    return {"report": "per-class-lateness", "cells": out}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -226,6 +330,9 @@ def main() -> None:
                          "(nightly tier)")
     ap.add_argument("--out", default="BENCH_online.json",
                     help="write rows as JSON here ('' to skip)")
+    ap.add_argument("--classes-out", default="",
+                    help="also write the per-class lateness/preemption "
+                         "report here (the nightly artifact)")
     args = ap.parse_args()
     print(HEADER)
     rows = run(smoke=args.smoke, full=args.full)
@@ -234,6 +341,10 @@ def main() -> None:
             json.dump({"bench": "online", "smoke": args.smoke,
                        "rows": rows}, f, indent=1)
         print(f"[wrote {args.out}: {len(rows)} rows]")
+    if args.classes_out:
+        with open(args.classes_out, "w") as f:
+            json.dump(class_report(rows), f, indent=1)
+        print(f"[wrote {args.classes_out}]")
 
 
 if __name__ == "__main__":

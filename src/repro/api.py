@@ -184,10 +184,17 @@ class Platform:
         recorder=None,
         rng: str = "pcg64",
         vectorized: Optional[bool] = None,
+        class_rank_of: Optional[Dict[str, int]] = None,
     ):
         """Queue a ``repro.fleet.WorkloadTrace`` on this platform's cluster;
         returns the ``FleetRunner`` (read ``runner.result()`` after
         ``run()``).
+
+        ``class_rank_of`` maps job_id -> SLA-class rank (0 = gold, larger =
+        lower class); every pool task a ranked job submits carries the rank,
+        so shared-cluster task priority is (class_rank, deadline) and gold
+        drains preempt running best_effort drains (§5.5). Unlisted jobs are
+        rank 0 — a trace with no map behaves exactly as before.
 
         ``rng`` selects the synthetic parties' stream scheme: ``"pcg64"``
         (default) is the original sequential per-party stream — existing
@@ -231,7 +238,7 @@ class Platform:
             self.sim, self.cluster, self.estimator, trace,
             strategy=strategy, seed=seed, round_gap_s=round_gap_s,
             priority_policy=priority_policy, recorder=recorder,
-            rng=rng, vectorized=vectorized,
+            rng=rng, vectorized=vectorized, class_rank_of=class_rank_of,
         )
         self._fleets.append(runner)
         self._fleet_job_ids.update(jt.job_id for jt in trace.jobs)

@@ -48,11 +48,29 @@ class Task:
     work_s: float  # pure compute seconds remaining
     on_complete: Callable[[float], None]  # called with completion time
     preemptible: bool = True
+    # SLA-class rank (repro.online): effective task priority is the pair
+    # (class_rank, priority), so a rank-0 (gold) drain outranks ANY lower
+    # class — including a deadline-boosted one — and §5.5 preemption
+    # crosses class boundaries. Rank 0 everywhere (the default) keeps the
+    # single-class order exactly (priority, task_id), i.e. today's.
+    class_rank: int = 0
     # bookkeeping
     started_at: Optional[float] = None
     container_id: Optional[int] = None
     _finish_evt: Optional[EventHandle] = None
     _work_started: Optional[float] = None
+
+    @property
+    def urgency(self) -> Tuple[int, float]:
+        """Effective §5.5 priority: class rank first, deadline second."""
+        return (self.class_rank, self.priority)
+
+    @property
+    def order_key(self) -> Tuple[int, float, int]:
+        """Deterministic total order: urgency, then task_id — equal-urgency
+        ties can never depend on incidental list/dict position, so paired
+        strategy comparisons cannot diverge on tie order."""
+        return (self.class_rank, self.priority, self.task_id)
 
 
 class Cluster:
@@ -73,6 +91,7 @@ class Cluster:
         self.n_deploys: int = 0
         self.n_deploys_by_job: Dict[str, int] = {}
         self.n_preemptions: int = 0
+        self.n_preemptions_by_job: Dict[str, int] = {}
         # container occupancy deltas (t, ±1) — covers pooled tasks plus any
         # always-on / streaming containers that register via note_container;
         # repro.fleet bins these into a cluster-utilization timeline
@@ -87,14 +106,20 @@ class Cluster:
         work_s: float,
         on_complete: Callable[[float], None],
         preemptible: bool = True,
+        class_rank: int = 0,
     ) -> Task:
         t = Task(next(self._ids), job_id, priority, work_s, on_complete,
-                 preemptible)
+                 preemptible, class_rank)
         self.pending.append(t)
         self._ensure_tick()
         return t
 
     def boost(self, task: Task, new_priority: float) -> None:
+        """Raise a task's urgency to at most ``new_priority`` (Fig. 6 line
+        21 force-trigger). Never *lowers* urgency — ``min`` keeps an
+        already-boosted task boosted — never changes ``class_rank``, and
+        never evicts anything by itself: a boosted non-preemptible task
+        simply sorts earlier in the pending queue."""
         task.priority = min(task.priority, new_priority)
         self._ensure_tick()
 
@@ -152,21 +177,26 @@ class Cluster:
 
     def _tick(self) -> None:
         self._tick_scheduled = False
-        self.pending.sort(key=lambda t: (t.priority, t.task_id))
+        self.pending.sort(key=lambda t: t.order_key)
         # start as many pending tasks as capacity allows
         while self.pending and self.idle_capacity() > 0:
             self._start(self.pending.pop(0))
-        # preemption: a strictly-higher-priority pending task evicts the
-        # worst running preemptible task (§5.5)
+        # preemption: a strictly-higher-urgency pending task evicts the
+        # worst running preemptible task (§5.5). Urgency is (class_rank,
+        # priority): a gold drain preempts a running best_effort drain
+        # even if the victim was deadline-boosted, while same-class
+        # contention stays earliest-deadline-first. The victim choice
+        # breaks equal-urgency ties on task_id (deterministic; never on
+        # dict iteration order).
         while self.pending:
             cand = self.pending[0]
             victims = [
                 t for t in self.running.values()
-                if t.preemptible and t.priority > cand.priority
+                if t.preemptible and t.urgency > cand.urgency
             ]
             if not victims:
                 break
-            victim = max(victims, key=lambda t: t.priority)
+            victim = max(victims, key=lambda t: t.order_key)
             self._preempt(victim)
             self._start(self.pending.pop(0))
         if self.pending:
@@ -210,6 +240,9 @@ class Cluster:
         assert task._finish_evt is not None
         task._finish_evt.cancel()
         self.n_preemptions += 1
+        self.n_preemptions_by_job[task.job_id] = (
+            self.n_preemptions_by_job.get(task.job_id, 0) + 1
+        )
         # NB: _work_started == 0.0 is a valid start time, not "unset"
         ws = (task._work_started if task._work_started is not None
               else self.sim.now)

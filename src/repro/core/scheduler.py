@@ -49,6 +49,10 @@ from repro.core.queue import MessageQueue
 class JobState:
     job: FLJobSpec
     predictor: UpdatePredictor
+    #: SLA-class rank (0 = gold). Every drain this job submits carries it,
+    #: so task priority on the shared pool is (class_rank, deadline) —
+    #: §5.5 priority scheduling across admission classes (repro.online).
+    class_rank: int = 0
     t_rnd: float = 0.0
     t_agg: float = 0.0
     round_idx: int = 0
@@ -146,12 +150,12 @@ class JITScheduler:
 
     # ---- Fig. 6 line 1: upon ARRIVAL -----------------------------------------
     def upon_arrival(self, job: FLJobSpec, *, gated: bool = False,
-                     predictor=None) -> JobState:
+                     predictor=None, class_rank: int = 0) -> JobState:
         job.validate()
         st = JobState(job=job,
                       predictor=predictor if predictor is not None
                       else UpdatePredictor(job),
-                      gated=gated)
+                      gated=gated, class_rank=class_rank)
         st.t_rnd = st.predictor.t_rnd()  # lines 6-11
         st.t_agg = self.est.t_agg(job)  # line 13
         self.jobs[job.job_id] = st  # line 12 (FLJOBS[J])
@@ -189,6 +193,7 @@ class JITScheduler:
                 work_s=self._round_work(st),
                 on_complete=lambda t, j=job_id: self._aggregated(j, t),
                 preemptible=True,
+                class_rank=st.class_rank,
             )
         st.timer = self.sim.schedule_at(
             st.deadline, lambda j=job_id: self.timer_alert(j)
@@ -266,14 +271,20 @@ class JITScheduler:
         submitted drain task, summed over arrival-gated jobs — together
         with ``len(cluster.pending)`` this is the open-loop controller's
         scale-up pressure signal."""
-        total = 0
-        for st in self.jobs.values():
+        return sum(self.drain_backlog_by_job().values())
+
+    def drain_backlog_by_job(self) -> Dict[str, int]:
+        """Per-job drain backlog (arrival-gated jobs only) — the online
+        autoscaler weights each job's backlog by its SLA class, so queued
+        gold work applies more scale-up pressure than best_effort."""
+        out: Dict[str, int] = {}
+        for job_id, st in self.jobs.items():
             if not st.gated:
                 continue
             if st.fast and st.arrival_times is not None:
                 self._fast_sync(st)  # presampled arrivals land lazily
-            total += max(st.arrived - st.submitted, 0)
-        return total
+            out[job_id] = max(st.arrived - st.submitted, 0)
+        return out
 
     # ---- feedback from parties ---------------------------------------------------
     def observe_update(self, job_id: str, party_id: str,
@@ -340,6 +351,7 @@ class JITScheduler:
             on_complete=lambda t, k=backlog, j=st.job.job_id:
                 self._drained(j, k, t),
             preemptible=True,
+            class_rank=st.class_rank,
         )
         return True
 

@@ -268,6 +268,7 @@ class RoundEngine:
         external_arrivals: bool = False,  # updates injected via inject_update
         gated_rounds: bool = False,  # next round waits for release_round()
         single_worker_fuse: bool = False,  # w_u = raw t_pair (real runtime)
+        class_rank: int = 0,  # SLA-class rank for pool tasks (repro.online)
     ):
         policy = as_policy(policy)
         job.validate()
@@ -281,6 +282,7 @@ class RoundEngine:
         self.external_arrivals = external_arrivals
         self.gated_rounds = gated_rounds
         self.single_worker_fuse = single_worker_fuse
+        self.class_rank = class_rank
         self._release_pending = False
         self._round_waiting = None  # continuation when gated
         self.predictor = UpdatePredictor(job)
@@ -444,6 +446,7 @@ class RoundEngine:
             work_s=k * self.w_u,
             on_complete=lambda t, k=k: self.task_done(k, t),
             preemptible=False,
+            class_rank=self.class_rank,
         )
 
     def stream_deploy(self) -> None:

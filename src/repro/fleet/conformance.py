@@ -27,7 +27,12 @@ invariants and returns a ``CellReport``:
      aggregation latency exceeds eager-AO's by at most the cell's
      declared tolerance (the paper's "negligible latency impact" claim,
      presence-fair under dropout patterns since both vehicles now hear
-     no-shows up front).
+     no-shows up front);
+  4. **gold band** — on classed cells (``class_ranks`` cycles SLA ranks
+     over the jobs), the rank-0 (gold) jobs' pooled §5.5 p95 lateness on
+     the scheduler vehicle stays inside the declared
+     ``gold_p95_lateness_band_s`` — class-rank pool priorities defended
+     under genuine drain contention.
 
 Capacity tiers: ``default`` is the benchmark pool (8 containers, fast
 fuse); ``tiny`` is an under-provisioned pool (2 containers, multi-second
@@ -48,6 +53,7 @@ import numpy as np
 from repro.core.cluster import ClusterConfig
 from repro.core.estimator import AggregationEstimator
 from repro.core.jobspec import FLJobSpec, PartySpec
+from repro.core.metrics import percentile
 from repro.fleet.fleet import FleetResult
 from repro.fleet.traces import (
     MeasuredRound,
@@ -135,10 +141,19 @@ class CellSpec:
     # fast path) — the vectorized_matrix cells prove the paired-stream
     # invariants hold on the fleet-at-scale path too
     rng: str = "pcg64"
+    # SLA-class ranks (repro.online ladder: 0=gold, 1=silver,
+    # 2=best_effort) cycled over the trace's jobs by index; None keeps
+    # every job rank 0 — the single-class matrix, bit-identical to the
+    # pre-class-rank cells
+    class_ranks: Optional[Tuple[int, ...]] = None
     # declared claims / tolerance bands
     min_savings_pct: Optional[float] = 60.0  # None: savings not claimed
     p50_band_s: float = 30.0  # allowed JIT p50 latency excess over eager-AO
     p95_band_s: float = 120.0  # ... and p95
+    # gold band: pooled p95 §5.5 lateness over the rank-0 jobs on the JIT
+    # scheduler run must stay within this many seconds (None: no claim) —
+    # the class-rank pool priorities defended as a matrix invariant
+    gold_p95_lateness_band_s: Optional[float] = None
 
     def __post_init__(self):
         if self.tier not in CAPACITY_TIERS:
@@ -161,7 +176,16 @@ class CellSpec:
     def name(self) -> str:
         h = f"-h{self.horizon_rounds}" if self.horizon_rounds else ""
         r = f"-{self.rng}" if self.rng != "pcg64" else ""
-        return f"{self.pattern}/{self.tier}{h}{r}"
+        c = "-classed" if self.class_ranks else ""
+        return f"{self.pattern}/{self.tier}{h}{r}{c}"
+
+    def class_rank_of(self, trace: WorkloadTrace) -> Optional[Dict[str, int]]:
+        """job_id -> SLA-class rank, cycling ``class_ranks`` over the
+        trace's jobs in order; None on single-class cells."""
+        if not self.class_ranks:
+            return None
+        return {jt.job_id: self.class_ranks[i % len(self.class_ranks)]
+                for i, jt in enumerate(trace.jobs)}
 
     def trace(self) -> WorkloadTrace:
         if self.pattern == MEASURED_PATTERN:
@@ -264,6 +288,9 @@ def run_cell(
     runs: Dict[str, VehicleRun] = {}
     failures: List[str] = []
     trace = spec.trace()  # immutable; one build serves every strategy
+    # every vehicle gets the SAME job->rank map: class ranks change pool
+    # scheduling only, so arrival parity must survive a classed cell
+    ranks = spec.class_rank_of(trace)
     for strategy in strategies:
         log: ArrivalLog = {}
 
@@ -275,7 +302,8 @@ def run_cell(
             AggregationEstimator(t_pair_s=spec.t_pair_s),
         )
         runner = platform.submit_fleet(
-            trace, strategy=strategy, recorder=recorder, rng=spec.rng)
+            trace, strategy=strategy, recorder=recorder, rng=spec.rng,
+            class_rank_of=ranks)
         platform.run()
         if not runner.all_done:
             failures.append(f"[{spec.name}] {strategy}: fleet did not run "
@@ -286,13 +314,16 @@ def run_cell(
             arrivals=log,
             result=runner.result(),
         )
-    failures.extend(check_invariants(spec, runs))
+    failures.extend(check_invariants(spec, runs, class_rank_of=ranks))
     return CellReport(spec=spec, runs=runs, failures=failures)
 
 
 def check_invariants(spec: CellSpec,
-                     runs: Dict[str, VehicleRun]) -> List[str]:
-    """The three paired invariants of one cell (see module docstring)."""
+                     runs: Dict[str, VehicleRun],
+                     class_rank_of: Optional[Dict[str, int]] = None,
+                     ) -> List[str]:
+    """The paired invariants of one cell (see module docstring), plus the
+    gold-band invariant on cells that declare one."""
     failures: List[str] = []
     # 1. arrival parity: every vehicle saw the same availability sequences
     names = list(runs)
@@ -324,6 +355,27 @@ def check_invariants(spec: CellSpec,
                     f"[{spec.name}] JIT {q} latency {jl:.3f}s exceeds "
                     f"eager-AO {al:.3f}s by more than the declared "
                     f"{band:.1f}s band")
+    # 4. gold band: on classed cells, §5.5 class-rank pool priorities must
+    #    keep the rank-0 (gold) jobs' pooled p95 lateness inside the
+    #    declared band on the scheduler vehicle, even while lower classes
+    #    queue and absorb preemptions on a contended pool
+    if spec.gold_p95_lateness_band_s is not None and jit:
+        ranks = class_rank_of or {}
+        gold = [x for job_id, m in jit.result.jobs.items()
+                if ranks.get(job_id, 0) == 0
+                for x in m.round_lateness]
+        if not gold:
+            failures.append(
+                f"[{spec.name}] gold band declared but the JIT run has no "
+                f"rank-0 lateness samples")
+        else:
+            p95 = percentile(gold, 0.95)
+            band = spec.gold_p95_lateness_band_s
+            if p95 > band:
+                failures.append(
+                    f"[{spec.name}] gold p95 lateness {p95:.3f}s exceeds "
+                    f"the declared {band:.1f}s band "
+                    f"({len(gold)} rank-0 samples)")
     return failures
 
 
@@ -350,6 +402,18 @@ def default_matrix(*, n_jobs: int = 5, seed: int = 0) -> List[CellSpec]:
         cells.append(CellSpec(
             pattern=pattern, tier="tiny", n_jobs=n_jobs, seed=seed,
             min_savings_pct=None, p50_band_s=20.0, p95_band_s=80.0))
+    # the class-rank cell (§5.5 SLA pool priorities): a contended
+    # tiny-tier pool with every job submitted at once and a
+    # gold/silver/best_effort ladder cycled across the fleet — class-rank
+    # scheduling must hold arrival parity AND keep gold p95 lateness
+    # inside its band while lower classes queue behind the gold drains
+    # and absorb the preemptions (observed: ~15.6 s gold p95, ~8
+    # preemptions; bands at ~2.5-4x observed)
+    cells.append(CellSpec(
+        pattern="steady", tier="tiny", n_jobs=12, seed=seed,
+        stagger_s=0.0, class_ranks=(0, 1, 2), min_savings_pct=None,
+        p50_band_s=40.0, p95_band_s=120.0,
+        gold_p95_lateness_band_s=60.0))
     # the measured cell family (carried ROADMAP follow-up): replayed
     # real-run exports must hold the same arrival-parity invariant — a
     # verbatim replay has even less room for divergence than sampled

@@ -71,6 +71,7 @@ class FleetRunner:
         on_job_complete: Optional[Callable[[str], None]] = None,
         rng: str = "pcg64",
         vectorized: Optional[bool] = None,
+        class_rank_of: Optional[Dict[str, int]] = None,
     ):
         self.sim = sim
         self.cluster = cluster
@@ -102,6 +103,11 @@ class FleetRunner:
         # (job_id, round_idx, completion_t) and once per completed job
         self.on_round = on_round
         self.on_job_complete = on_job_complete
+        # SLA-class ranks (repro.online): job_id -> rank carried into every
+        # pool task this job submits, so task priority on the shared cluster
+        # is (class_rank, deadline). Missing/None = rank 0 (single class),
+        # which keeps batch traces bit-identical to the unranked code.
+        self.class_rank_of: Dict[str, int] = dict(class_rank_of or {})
         # the scheduler vehicle handles the bare name "jit"; anything else
         # (including an explicit PolicyConfig, even strategy="jit") runs on
         # per-job RoundEngines over the same cluster
@@ -146,18 +152,23 @@ class FleetRunner:
             len(self.specs) == self._n_expected)
 
     # ---- job submission ----------------------------------------------------
-    def submit_job(self, jt: JobTrace) -> None:
+    def submit_job(self, jt: JobTrace, class_rank: int = 0) -> None:
         """Admit one more job into the running fleet NOW (at ``sim.now``).
 
         This is the open-loop path (``repro.online``): batch traces
         pre-schedule every job at construction, an online controller admits
         jobs as its arrival stream produces them. The job joins the same
-        shared cluster/scheduler and counts toward ``all_done``."""
+        shared cluster/scheduler and counts toward ``all_done``.
+        ``class_rank`` is the job's SLA-class rank (0 = gold): every pool
+        task the job submits carries it, making task priority
+        (class_rank, deadline) under §5.5 preemption."""
         if jt.job_id in self._ids:
             raise ValueError(
                 f"duplicate job id {jt.job_id!r} in fleet {self.trace.name!r}")
         self._ids.add(jt.job_id)
         self._n_expected += 1
+        if class_rank:
+            self.class_rank_of[jt.job_id] = class_rank
         self._submit(jt)
 
     def _submit(self, jt: JobTrace) -> None:
@@ -167,6 +178,7 @@ class FleetRunner:
         self.parties[spec.job_id] = parties
         if sampler is not None:
             self._samplers[spec.job_id] = sampler
+        rank = self.class_rank_of.get(spec.job_id, 0)
         if self.use_scheduler:
             predictor = None
             if self.vectorized and sampler is not None:
@@ -174,13 +186,15 @@ class FleetRunner:
                 # begin_round_presampled (measured jobs keep the scalar one)
                 predictor = VectorizedUpdatePredictor(spec)
             self.scheduler.upon_arrival(spec, gated=True,
-                                        predictor=predictor)
+                                        predictor=predictor,
+                                        class_rank=rank)
             self.scheduler.start_round(spec.job_id)
             return
         # MeasuredParty processes replay measured jobs through the same
         # source adapter the synthetic parties use
         engine = RoundEngine(
             self.sim, self.cluster, spec, self.est, self.policy,
+            class_rank=rank,
             arrival_model=FleetArrivalSource(
                 self.sim, self.parties[spec.job_id],
                 job_id=spec.job_id, recorder=self.recorder),

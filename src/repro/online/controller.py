@@ -11,16 +11,24 @@ the same machinery) and consumes an ``ArrivalStream`` open-loop:
     ``best_effort`` jobs are shed once the queue is full (best_effort
     never queues ahead of silver: it sheds directly under burst when
     ``shed_under_burst``). Queued jobs are released at control ticks once
-    the burst clears. Decisions depend ONLY on the arrival clock — never
-    on downstream completion — so two strategies fed the same stream
+    the burst clears, in SLA-class order (rank, then FIFO within a
+    class). Decisions depend ONLY on the arrival clock — never on
+    downstream completion — so two strategies fed the same stream
     admit/queue/shed the identical job multiset at identical times and
     paired cost comparisons stay paired.
+  * **pool priorities**: every admitted job's pool tasks carry its class
+    ``rank``, making shared-cluster task priority (rank, deadline) —
+    gold drains preempt running best_effort drains under §5.5
+    preemption-by-checkpoint, so gold holds its lateness band even when
+    the pool itself saturates and admission control alone cannot help.
   * **autoscaling** of the aggregator pool against observed queue depth
-    (``len(cluster.pending)``), the scheduler's ``drain_backlog()`` and
-    the trailing mean occupancy integrated from
-    ``Cluster.occupancy_events``: scale up ``scale_up_step`` when queued
-    work piles up, scale down ``scale_down_step`` only after
-    ``scale_down_ticks`` consecutive low-occupancy ticks (hysteresis),
+    (``len(cluster.pending)``), the scheduler's class-weighted drain
+    backlog (``backlog_weight``: queued gold counts more than queued
+    best_effort) and the trailing mean occupancy integrated from
+    ``Cluster.occupancy_events`` against the capacity in effect at each
+    event time: scale up ``scale_up_step`` when queued work piles up,
+    scale down ``scale_down_step`` only after ``scale_down_ticks``
+    consecutive low-occupancy ticks (hysteresis, on the raw backlog),
     within ``[min_capacity, max_capacity]``.
   * **windowed metrics** (``WindowedFleetMetrics``) pollable mid-run via
     ``poll()``, reconciling against the batch ``fleet_rollup`` at the end.
@@ -36,7 +44,10 @@ unbounded ``sim.run()`` would never return).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
+import itertools
 import math
 from typing import Callable, Deque, Dict, List, Optional, Set, Tuple, Union
 
@@ -67,18 +78,34 @@ class SLAClass:
     queue_under_burst: bool
     #: under burst: drop the job outright (never runs, never billed)
     shed_under_burst: bool
+    #: pool-priority rank (0 = most important). Every pool task an admitted
+    #: job submits carries it: effective task priority on the shared
+    #: cluster is (rank, deadline), so gold drains preempt running
+    #: best_effort drains under §5.5 preemption-by-checkpoint, and the
+    #: admission queue releases in rank order. Rank 0 everywhere (the
+    #: single-class default) is today's pure-deadline scheduling.
+    rank: int = 0
+    #: scale-up pressure per queued gated update of this class: the
+    #: autoscaler compares sum(backlog_j * weight_class(j)) against
+    #: ``scale_up_backlog``, so queued gold work grows the pool sooner
+    #: than the same volume of best_effort work. 1.0 keeps the all-gold
+    #: default identical to the unweighted signal.
+    backlog_weight: float = 1.0
 
 
 #: The default class ladder. ``gold`` always admits; ``silver`` queues
 #: under burst but is never shed; ``best_effort`` is shed under burst.
 SLA_CLASSES: Dict[str, SLAClass] = {
     "gold": SLAClass("gold", lateness_p95_band_s=60.0,
-                     queue_under_burst=False, shed_under_burst=False),
+                     queue_under_burst=False, shed_under_burst=False,
+                     rank=0, backlog_weight=1.0),
     "silver": SLAClass("silver", lateness_p95_band_s=600.0,
-                       queue_under_burst=True, shed_under_burst=False),
+                       queue_under_burst=True, shed_under_burst=False,
+                       rank=1, backlog_weight=0.5),
     "best_effort": SLAClass("best_effort",
                             lateness_p95_band_s=math.inf,
-                            queue_under_burst=True, shed_under_burst=True),
+                            queue_under_burst=True, shed_under_burst=True,
+                            rank=2, backlog_weight=0.25),
 }
 
 #: job -> class assignment accepted by ``Platform.serve(sla=...)``
@@ -187,6 +214,10 @@ class ClassStats:
     admitted: int = 0
     queued: int = 0  # of the admitted, how many waited in the queue
     shed: int = 0
+    #: §5.5 preemptions suffered by this class's jobs on the shared pool —
+    #: under class-rank scheduling, best_effort absorbs the evictions that
+    #: keep gold inside its lateness band
+    preemptions: int = 0
     queue_wait_s: List[float] = dataclasses.field(default_factory=list)
     lateness: List[float] = dataclasses.field(default_factory=list)
 
@@ -202,6 +233,7 @@ class ClassStats:
             "admitted": self.admitted,
             "queued": self.queued,
             "shed": self.shed,
+            "preemptions": self.preemptions,
             "p95_lateness_s": None if p95 is None else round(p95, 3),
             "max_queue_wait_s": (round(max(self.queue_wait_s), 3)
                                  if self.queue_wait_s else 0.0),
@@ -328,7 +360,12 @@ class OnlineController:
         self._occ_prev_t = sim.now
         # ---- admission state ---------------------------------------------
         self._arrivals: Deque[float] = collections.deque()  # trailing times
-        self._queue: Deque[Tuple[float, str, JobTrace]] = collections.deque()
+        # class-ordered admission queue: a heap on (rank, seq) so a release
+        # tick always admits the highest class first, FIFO within a class —
+        # a queued best_effort job can never jump a later-queued silver one.
+        # Entries: (rank, seq, queued_at, class_name, job_trace).
+        self._queue: List[Tuple[int, int, float, str, JobTrace]] = []
+        self._queue_seq = itertools.count()
         self._active: Set[str] = set()
         self._arrived_n = 0
         self.class_of: Dict[str, str] = {}
@@ -343,6 +380,7 @@ class OnlineController:
             cs_getter=self._billed_container_seconds,
             pool_getter=lambda: self.cluster.capacity,
             price_per_container_s=cluster.cfg.price_per_container_s,
+            preempt_getter=self._preemptions_by_class,
         )
         self.windows.start()
         # ---- liveness ----------------------------------------------------
@@ -431,7 +469,8 @@ class OnlineController:
             if len(self._queue) >= self.adm.queue_limit:
                 self._shed(jt, st)  # queue overflow
             else:
-                self._queue.append((now, name, jt))
+                heapq.heappush(self._queue, (cls.rank, next(self._queue_seq),
+                                             now, name, jt))
                 self.windows.observe_admission("queued")
         else:
             self._admit(jt, st)
@@ -450,7 +489,10 @@ class OnlineController:
 
     def _admit(self, jt: JobTrace, st: ClassStats,
                queued_since: Optional[float] = None) -> None:
-        self.runner.submit_job(jt)
+        # the job's class rank rides on every pool task it submits, making
+        # shared-cluster task priority (rank, deadline) — §5.5 priorities
+        # across admission classes, not just at the front door
+        self.runner.submit_job(jt, class_rank=self.sla_classes[st.name].rank)
         self._active.add(jt.job_id)
         self._cursor[jt.job_id] = (0, 0)
         st.admitted += 1
@@ -505,11 +547,13 @@ class OnlineController:
         now = self.sim.now
         self._trim_arrivals(now)
         # 1. release queued jobs once the burst has cleared (rate signal
-        #    only: identical release times across paired strategy runs)
+        #    only: identical release times across paired strategy runs) —
+        #    in class order: heappop yields (rank, seq), so silver drains
+        #    before best_effort regardless of queueing order
         released = 0
         while (self._queue and released < self.adm.dequeue_per_tick
                and len(self._arrivals) <= self.adm.burst_arrivals):
-            since, name, jt = self._queue.popleft()
+            _, _, since, name, jt = heapq.heappop(self._queue)
             self._admit(jt, self.stats[name], queued_since=since)
             released += 1
         # 2. autoscale the aggregator pool
@@ -519,14 +563,31 @@ class OnlineController:
             self._tick_evt = self.sim.schedule(
                 self.auto.control_interval_s, self._tick)
 
+    def _weighted_backlog(self) -> Tuple[int, float]:
+        """(raw, class-weighted) gated drain backlog. The weighted sum is
+        the scale-up signal — queued gold updates count backlog_weight=1.0
+        each, best_effort 0.25 — so the pool grows for gold pressure first.
+        The raw sum feeds the unchanged scale-down hysteresis. All-gold
+        (the single-class default) makes the two identical."""
+        if not self.runner.use_scheduler:
+            return 0, 0.0
+        by_job = self.runner.scheduler.drain_backlog_by_job()
+        raw = sum(by_job.values())
+        weighted = 0.0
+        for job_id, k in by_job.items():
+            name = self.class_of.get(job_id)
+            w = self.sla_classes[name].backlog_weight \
+                if name is not None else 1.0
+            weighted += k * w
+        return raw, weighted
+
     def _autoscale(self, now: float) -> None:
         cap = self.cluster.capacity
         pending = len(self.cluster.pending)
-        backlog = (self.runner.scheduler.drain_backlog()
-                   if self.runner.use_scheduler else 0)
+        backlog, weighted = self._weighted_backlog()
         occ = self._mean_occupancy(now)
         if (pending >= self.auto.scale_up_pending
-                or backlog >= self.auto.scale_up_backlog):
+                or weighted >= self.auto.scale_up_backlog):
             self._idle_ticks = 0
             if cap < self._max_capacity:
                 new = min(self._max_capacity, cap + self.auto.scale_up_step)
@@ -552,9 +613,34 @@ class OnlineController:
         self.cluster.resize(new)
         self.pool_timeline.append((now, new))
 
+    def _frac_area(self, a: float, b: float, level: int) -> float:
+        """Integral of ``level / cap(t)`` over [a, b], with cap(t) read
+        from ``pool_timeline`` — the capacity in effect at each instant,
+        not the current capacity (a resize inside the window would
+        otherwise mis-normalize the whole window)."""
+        if b <= a or level == 0:
+            return 0.0
+        tl = self.pool_timeline
+        # rightmost step starting at or before a (timeline starts at the
+        # service start time, so i >= 0 whenever a is inside the service)
+        i = max(bisect.bisect_right(tl, (a, float("inf"))) - 1, 0)
+        area, t = 0.0, a
+        while t < b:
+            cap = tl[i][1]
+            nxt = tl[i + 1][0] if i + 1 < len(tl) else b
+            seg_end = min(b, nxt)
+            area += level * (seg_end - t) / max(cap, 1)
+            t = seg_end
+            i += 1
+        return area
+
     def _mean_occupancy(self, now: float) -> float:
         """Trailing mean pool occupancy (fraction of capacity) since the
-        last tick, integrated from ``Cluster.occupancy_events``."""
+        last tick, integrated from ``Cluster.occupancy_events`` against the
+        capacity *in effect at each event time* (``pool_timeline``), so a
+        mid-window ``Cluster.resize`` — including a shrink below the live
+        container count, idle_capacity < 0 — is normalized piecewise
+        instead of against whatever the capacity happens to be now."""
         t0 = self._occ_prev_t
         ev = self.cluster.occupancy_events
         if now <= t0:
@@ -565,13 +651,13 @@ class OnlineController:
             if t > now:
                 break  # future-stamped release (preemption checkpoint)
             t = max(t, prev)
-            area += level * (t - prev)
+            area += self._frac_area(prev, t, level)
             prev, level = t, level + delta
             self._occ_idx += 1
-        area += level * (now - prev)
+        area += self._frac_area(prev, now, level)
         self._occ_level = level
         self._occ_prev_t = now
-        return area / ((now - t0) * max(self.cluster.capacity, 1))
+        return area / (now - t0)
 
     # ---- quiescence -----------------------------------------------------------
     def _quiesced(self) -> bool:
@@ -591,6 +677,16 @@ class OnlineController:
         return True
 
     # ---- results ----------------------------------------------------------------
+    def _preemptions_by_class(self) -> Dict[str, int]:
+        """Cumulative §5.5 preemption counts attributed to the preempted
+        job's SLA class, from the cluster's per-job ledger."""
+        out: Dict[str, int] = {name: 0 for name in self.sla_classes}
+        for job_id, n in self.cluster.n_preemptions_by_job.items():
+            name = self.class_of.get(job_id)
+            if name is not None:
+                out[name] = out.get(name, 0) + n
+        return out
+
     def _billed_container_seconds(self) -> float:
         """Cumulative billing over this service's jobs, summed in job
         insertion order from the cluster's per-job ledger — the identical
@@ -617,6 +713,9 @@ class OnlineController:
                 "service still live; drain() it (or advance until done) "
                 "before reading result() — poll() works mid-run")
         res = self.runner.result()
+        for name, n in self._preemptions_by_class().items():
+            if name in self.stats:
+                self.stats[name].preemptions = n
         return OnlineReport(
             strategy=self.strategy_name,
             jobs=res.jobs,

@@ -4,9 +4,10 @@ Batch fleet runs roll every per-round sample into one ``fleet_rollup`` at
 the end; a long-lived service needs numbers *while it runs*. A
 ``WindowedFleetMetrics`` cuts the virtual timeline into fixed tumbling
 windows and accumulates, per window: completed rounds, §6.2 aggregation
-latency samples, §5.5 SLA lateness (overall and per SLA class),
-container-seconds recognised in the window, admission outcomes
-(admitted/queued/shed) and the aggregator-pool size at the window close.
+latency samples, §5.5 SLA lateness (overall and per SLA class), §5.5
+preemptions per SLA class, container-seconds recognised in the window,
+admission outcomes (admitted/queued/shed) and the aggregator-pool size at
+the window close.
 
 ``snapshot()`` is pollable mid-run and returns only *completed* (finalised)
 windows — their stats never change afterwards, so a mid-run poll agrees
@@ -43,6 +44,11 @@ class WindowStats:
     latencies: List[float] = dataclasses.field(default_factory=list)
     lateness: List[float] = dataclasses.field(default_factory=list)
     lateness_by_class: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
+    #: §5.5 preemptions recognised in this window, attributed to the
+    #: preempted job's SLA class — under class-rank scheduling this shows
+    #: best_effort absorbing the evictions that protect gold mid-run
+    preemptions_by_class: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     container_seconds: float = 0.0  # billing recognised in this window
     pool_capacity_end: int = 0  # aggregator-pool size at window close
@@ -86,6 +92,12 @@ class WindowStats:
             "admitted": self.n_admitted,
             "queued": self.n_queued,
             "shed": self.n_shed,
+            "p95_lateness_by_class_s": {
+                name: (None if self.class_p95_lateness_s(name) is None
+                       else round(self.class_p95_lateness_s(name), 3))
+                for name in sorted(self.lateness_by_class)},
+            "preemptions_by_class": dict(sorted(
+                self.preemptions_by_class.items())),
         }
 
     def _frozen_copy(self) -> "WindowStats":
@@ -95,6 +107,7 @@ class WindowStats:
             lateness=list(self.lateness),
             lateness_by_class={k: list(v)
                                for k, v in self.lateness_by_class.items()},
+            preemptions_by_class=dict(self.preemptions_by_class),
         )
 
 
@@ -117,6 +130,7 @@ class WindowedFleetMetrics:
         cs_getter: Callable[[], float],
         pool_getter: Callable[[], int],
         price_per_container_s: float,
+        preempt_getter: Optional[Callable[[], Dict[str, int]]] = None,
     ):
         if window_s <= 0.0:
             raise ValueError(f"window_s must be > 0, got {window_s}")
@@ -124,6 +138,10 @@ class WindowedFleetMetrics:
         self.window_s = window_s
         self._cs_getter = cs_getter
         self._pool_getter = pool_getter
+        # cumulative per-class §5.5 preemption counts (optional); per-window
+        # numbers are the delta across the window, like container_seconds
+        self._preempt_getter = preempt_getter
+        self._preempt_at_cur_start: Dict[str, int] = {}
         self.price = price_per_container_s
         self._completed: List[WindowStats] = []
         self._cur = WindowStats(index=0, start_s=0.0, end_s=window_s)
@@ -152,6 +170,13 @@ class WindowedFleetMetrics:
         cs = self._cs_getter()
         cur.container_seconds = cs - self._cs_at_cur_start
         cur.pool_capacity_end = self._pool_getter()
+        if self._preempt_getter is not None:
+            tot = self._preempt_getter()
+            prev = self._preempt_at_cur_start
+            cur.preemptions_by_class = {
+                name: n - prev.get(name, 0)
+                for name, n in tot.items() if n - prev.get(name, 0)}
+            self._preempt_at_cur_start = dict(tot)
         self._completed.append(cur)
         self._cs_at_cur_start = cs
         self._cur = WindowStats(
@@ -230,6 +255,10 @@ class WindowedFleetMetrics:
         for w in self._completed:
             for name, xs in w.lateness_by_class.items():
                 by_class.setdefault(name, []).extend(xs)
+        preempt: Dict[str, int] = {}
+        for w in self._completed:
+            for name, n in w.preemptions_by_class.items():
+                preempt[name] = preempt.get(name, 0) + n
         return {
             "windows": len(self._completed),
             "window_s": self.window_s,
@@ -242,6 +271,7 @@ class WindowedFleetMetrics:
             "p95_lateness_by_class_s": {
                 name: percentile(xs, 0.95)
                 for name, xs in sorted(by_class.items())},
+            "preemptions_by_class": dict(sorted(preempt.items())),
             "container_seconds": cs,
             "cost_usd": cs * self.price,
             "admitted": sum(w.n_admitted for w in self._completed),

@@ -195,6 +195,49 @@ def test_check_invariants_flags_latency_band_violation():
     assert any("p95 latency" in f for f in fails)
 
 
+def test_check_invariants_flags_gold_band_violation():
+    """The class-rank cell's gold-band invariant is a real check: rank-0
+    lateness over the band fails, and only rank-0 samples count."""
+    from repro.core.metrics import JobMetrics
+
+    spec = CellSpec(pattern="steady", tier="tiny", class_ranks=(0, 2),
+                    min_savings_pct=None, p50_band_s=1e9, p95_band_s=1e9,
+                    gold_p95_lateness_band_s=60.0)
+    a = {("j", "p"): [(1.0, 0.5)]}
+    run = _fake_run("jit", a)
+    run.result.jobs = {
+        "gold": JobMetrics(job_id="gold", strategy="jit",
+                           round_lateness=[10.0, 200.0]),
+        "be": JobMetrics(job_id="be", strategy="jit",
+                         round_lateness=[9000.0]),
+    }
+    runs = {"jit": run, "eager_ao": _fake_run("eager_ao", a)}
+    fails = check_invariants(spec, runs,
+                             class_rank_of={"gold": 0, "be": 2})
+    assert any("gold p95 lateness" in f for f in fails)
+    # inside the band (and best_effort's 9000s sample ignored): no failure
+    run.result.jobs["gold"].round_lateness = [10.0, 20.0]
+    assert check_invariants(spec, runs,
+                            class_rank_of={"gold": 0, "be": 2}) == []
+    # a declared band with no rank-0 samples is itself a violation
+    run.result.jobs["gold"].round_lateness = []
+    fails = check_invariants(spec, runs,
+                             class_rank_of={"gold": 0, "be": 2})
+    assert any("no rank-0" in f for f in fails)
+
+
+def test_classed_cell_spec_naming_and_rank_map():
+    spec = CellSpec(pattern="steady", tier="tiny", n_jobs=5,
+                    class_ranks=(0, 1, 2), min_savings_pct=None)
+    assert spec.name == "steady/tiny-classed"
+    trace = spec.trace()
+    ranks = spec.class_rank_of(trace)
+    # the ladder cycles over the trace's jobs in order
+    assert [ranks[j.job_id] for j in trace.jobs] == [0, 1, 2, 0, 1]
+    # single-class specs report no map at all (bit-identical legacy path)
+    assert CellSpec(pattern="steady").class_rank_of(trace) is None
+
+
 def test_cell_spec_validation_and_tiers():
     with pytest.raises(ValueError, match="tier"):
         CellSpec(pattern="steady", tier="huge")

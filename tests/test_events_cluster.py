@@ -144,6 +144,110 @@ def test_repeated_evictions_keep_accounting_consistent():
     assert sum(d for _, d in cl.occupancy_events) == 0
 
 
+# ---------------------------------------------------------------------------
+# §5.5 class-rank priorities, deterministic victim choice, boost semantics
+# ---------------------------------------------------------------------------
+def test_preemption_victim_tiebreak_is_deterministic():
+    """Equal-urgency victims: eviction picks the largest (class_rank,
+    priority, task_id) — the later-submitted task — never whatever the
+    running dict happens to iterate. Regression lock for the victim
+    tie-break: paired strategy comparisons must not diverge on tie order."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=2, deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=0.0, delta_s=0.1)
+    cl = Cluster(sim, cfg)
+    a = cl.submit("a", priority=10.0, work_s=50.0, on_complete=lambda t: None)
+    b = cl.submit("b", priority=10.0, work_s=50.0, on_complete=lambda t: None)
+    sim.schedule(5.0, lambda: cl.submit(
+        "hi", priority=0.0, work_s=5.0, on_complete=lambda t: None))
+    sim.run(until=6.0)
+    assert a.task_id < b.task_id
+    assert cl.n_preemptions == 1
+    # both victims tie on (class_rank, priority); task_id breaks the tie
+    assert cl.n_preemptions_by_job == {"b": 1}
+    assert a.container_id is not None  # the earlier submission kept running
+
+
+def test_class_rank_outranks_deadline_priority_for_preemption():
+    """A pending gold (rank-0) drain evicts a running best_effort (rank-2)
+    task even when the victim's deadline priority is numerically far more
+    urgent: effective §5.5 urgency is (class_rank, priority)."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=1, deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=0.1, delta_s=0.1)
+    cl = Cluster(sim, cfg)
+    done = []
+    cl.submit("be", priority=-1e9, work_s=50.0,
+              on_complete=lambda t: done.append("be"), class_rank=2)
+    sim.schedule(5.0, lambda: cl.submit(
+        "gold", priority=100.0, work_s=5.0,
+        on_complete=lambda t: done.append("gold"), class_rank=0))
+    sim.run()
+    assert cl.n_preemptions == 1
+    assert cl.n_preemptions_by_job == {"be": 1}
+    assert done == ["gold", "be"]
+
+
+def test_boost_on_running_task_never_restarts_it():
+    """Boosting an already-running task only updates its priority field:
+    no eviction, no redeploy, completion time unchanged."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=1, deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=0.0, delta_s=0.1)
+    cl = Cluster(sim, cfg)
+    done = []
+    t = cl.submit("job", priority=10.0, work_s=10.0, on_complete=done.append)
+    sim.schedule(3.0, lambda: cl.boost(t, float("-inf")))
+    sim.run()
+    assert t.priority == float("-inf")
+    assert done == [pytest.approx(10.0)]  # finished on the original schedule
+    assert cl.n_preemptions == 0 and cl.n_deploys == 1
+
+
+def test_boost_never_lowers_urgency_or_touches_class_rank():
+    """boost is min(current, new): a later, weaker boost cannot undo an
+    earlier force-trigger, and the SLA class rank is never modified."""
+    sim = Simulator()
+    cl = Cluster(sim, ClusterConfig())
+    t = cl.submit("job", priority=5.0, work_s=1.0,
+                  on_complete=lambda tt: None, class_rank=1)
+    cl.boost(t, 100.0)  # weaker than the current priority: no-op
+    assert t.priority == 5.0
+    cl.boost(t, -3.0)
+    assert t.priority == -3.0
+    cl.boost(t, 0.0)  # weaker than the standing boost: still -3
+    assert t.priority == -3.0
+    assert t.class_rank == 1 and t.urgency == (1, -3.0)
+
+
+def test_boosted_rival_never_evicts_non_preemptible_task():
+    """A non-preemptible running task survives any rival boost: even a
+    gold-class -inf force-trigger queues behind it until it finishes."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=1, deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=0.0, delta_s=0.1)
+    cl = Cluster(sim, cfg)
+    done = []
+    cl.submit("fixed", priority=50.0, work_s=20.0,
+              on_complete=lambda t: done.append(("fixed", t)),
+              preemptible=False, class_rank=2)
+    rival = {}
+
+    def submit_rival():
+        rival["t"] = cl.submit(
+            "rival", priority=100.0, work_s=5.0,
+            on_complete=lambda t: done.append(("rival", t)), class_rank=0)
+
+    # rival arrives AFTER fixed holds the only container, then force-triggers
+    sim.schedule(0.3, submit_rival)
+    sim.schedule(0.5, lambda: cl.boost(rival["t"], float("-inf")))
+    sim.run()
+    assert cl.n_preemptions == 0
+    assert [j for j, _ in done] == ["fixed", "rival"]
+    assert done[0][1] == pytest.approx(20.0)  # uninterrupted run
+    assert done[1][1] >= 25.0  # rival waited out the full task
+
+
 def test_always_on_container_bills_lifetime():
     sim = Simulator()
     cl = Cluster(sim, ClusterConfig())

@@ -389,13 +389,83 @@ def test_trace_replay_reconciles_bit_for_bit_with_batch():
 
 
 # --------------------------------------------------------------------------
+# class-ordered admission queue (regression: one FIFO deque released a
+# queued best_effort ahead of a later-queued silver)
+# --------------------------------------------------------------------------
+def test_admission_queue_releases_in_class_order():
+    trace = synthetic_fleet(3, "steady", seed=0)
+    order = ["silver", "best_effort", "silver"]
+    # a ladder where best_effort QUEUES under burst (instead of shedding),
+    # so queue ordering is observable on a mixed-class burst
+    ladder = {
+        "silver": SLA_CLASSES["silver"],
+        "best_effort": dataclasses.replace(
+            SLA_CLASSES["best_effort"], shed_under_burst=False,
+            queue_under_burst=True),
+    }
+    platform = _platform()
+    handle = StreamHandle()
+    svc = platform.serve(
+        handle, sla=lambda jt, i: order[i], sla_classes=ladder,
+        autoscaler=AutoscalerConfig.fixed(8),
+        admission=AdmissionConfig(burst_window_s=100.0, burst_arrivals=1,
+                                  dequeue_per_tick=1),
+    )
+    for jt in trace.jobs:
+        handle.submit(jt)  # all three arrive at t=0
+    handle.close()
+    report = svc.drain()
+    # 1st silver admits before the burst trips; best_effort then queues
+    # BEFORE the 2nd silver
+    s, b = report.classes["silver"], report.classes["best_effort"]
+    assert (s.admitted, s.queued) == (2, 1)
+    assert (b.admitted, b.queued) == (1, 1)
+    # one release per tick: the later-queued silver still comes out a
+    # full tick (30s) ahead of the earlier-queued best_effort — class
+    # order, not FIFO. t=120 is the first tick past the 100s window.
+    assert s.queue_wait_s == [pytest.approx(120.0)]
+    assert b.queue_wait_s == [pytest.approx(150.0)]
+
+
+# --------------------------------------------------------------------------
+# autoscaler occupancy: capacity-at-event-time normalization (regression:
+# a mid-window resize was normalized against the CURRENT capacity)
+# --------------------------------------------------------------------------
+def test_mean_occupancy_integrates_capacity_at_event_time():
+    platform = _platform(capacity=4)
+    svc = platform.serve(StreamHandle(), autoscaler=AutoscalerConfig.fixed(4))
+    cluster = svc.cluster
+    # four containers saturate the pool from t=0
+    for _ in range(4):
+        cluster.note_container(0.0, +1)
+    # the pool shrinks to 2 at t=50 while all four are still live: the
+    # shrink-while-saturated window (Cluster.resize never evicts, so the
+    # live container level sits ABOVE the new capacity)
+    svc._resize(50.0, 2)
+    assert cluster.capacity == 2
+    # occupancy over [0, 100]: 4/4 for the first half, 4/2 for the second
+    # = 1.5 — NOT the 2.0 a current-capacity normalization reports
+    assert svc._mean_occupancy(100.0) == pytest.approx(1.5)
+
+
+# --------------------------------------------------------------------------
 # the golden burst acceptance cell (benchmarks/online.py --smoke)
 # --------------------------------------------------------------------------
 @pytest.fixture(scope="module")
-def smoke_rows():
+def bench_rows():
     from benchmarks import online as bench
 
-    return {r["variant"]: r for r in bench.run(smoke=True)}
+    return {(r["scenario"], r["variant"]): r for r in bench.run(smoke=True)}
+
+
+@pytest.fixture(scope="module")
+def smoke_rows(bench_rows):
+    return {v: r for (s, v), r in bench_rows.items() if s == "burst-3x"}
+
+
+@pytest.fixture(scope="module")
+def saturation_rows(bench_rows):
+    return {v: r for (s, v), r in bench_rows.items() if s == "saturation"}
 
 
 def test_burst_variants_consume_identical_streams(smoke_rows):
@@ -410,8 +480,10 @@ def test_burst_variants_consume_identical_streams(smoke_rows):
         == (18, 15, 3, 3)
     # both jit variants run the identical admitted jobs to completion
     assert jit["rounds"] == fixed["rounds"] == 66
-    # billing depends only on the strategy, not the pool size
-    assert jit["container_seconds"] == fixed["container_seconds"]
+    # billing is near pool-size independent: a briefly-saturated small
+    # pool only re-batches drains, shifting per-task overhead by < 0.5%
+    assert jit["container_seconds"] == pytest.approx(
+        fixed["container_seconds"], rel=0.005)
 
 
 def test_burst_golden_cell_autoscaled_jit_vs_eager_ao(smoke_rows):
@@ -419,13 +491,13 @@ def test_burst_golden_cell_autoscaled_jit_vs_eager_ao(smoke_rows):
     ao = smoke_rows["eager_ao-fixed"]
     # the acceptance claim: autoscaled JIT bills <= 40% of fixed eager-AO
     assert jit["container_seconds"] <= 0.40 * ao["container_seconds"]
-    assert jit["savings_vs_ao_pct"] == pytest.approx(95.83, abs=0.01)
+    assert jit["savings_vs_ao_pct"] == pytest.approx(95.81, abs=0.01)
     # golden lock on the deterministic cell (seeded stream, virtual clock)
-    assert jit["container_seconds"] == pytest.approx(1161.0, abs=0.1)
+    assert jit["container_seconds"] == pytest.approx(1164.9, abs=0.1)
     assert ao["container_seconds"] == pytest.approx(27821.4, abs=0.1)
-    assert jit["makespan_s"] == pytest.approx(6191.8, abs=0.1)
-    assert jit["p50_latency_s"] == pytest.approx(11.86, abs=0.01)
-    assert jit["p95_latency_s"] == pytest.approx(49.09, abs=0.01)
+    assert jit["makespan_s"] == pytest.approx(6192.2, abs=0.1)
+    assert jit["p50_latency_s"] == pytest.approx(11.91, abs=0.01)
+    assert jit["p95_latency_s"] == pytest.approx(49.29, abs=0.01)
     assert jit["windows"] == 11
 
 
@@ -434,27 +506,65 @@ def test_burst_golden_cell_sla_and_autoscaling(smoke_rows):
     fixed = smoke_rows["jit-fixed"]
     # gold stays inside its declared band while best_effort sheds
     assert jit["gold_attained"] is True
-    assert jit["gold_p95_lateness_s"] == pytest.approx(161.463, abs=0.01)
+    assert jit["gold_p95_lateness_s"] == pytest.approx(161.513, abs=0.01)
     assert jit["gold_p95_lateness_s"] <= jit["gold_band_s"] == 240.0
-    assert jit["silver_p95_lateness_s"] == pytest.approx(426.459, abs=0.01)
+    assert jit["silver_p95_lateness_s"] == pytest.approx(426.559, abs=0.01)
     assert jit["best_effort_shed"] == 3
+    # the burst cell never saturates the pool into priority inversions:
+    # no class suffers a single preemption
+    assert (jit["gold_preemptions"], jit["silver_preemptions"],
+            jit["best_effort_preemptions"]) == (0, 0, 0)
     # the autoscaler moved (both directions) and stayed within the caps
     assert jit["scale_ups"] > 0 and jit["scale_downs"] > 0
     assert jit["peak_pool"] == 8
     assert fixed["scale_ups"] == 0 and fixed["scale_downs"] == 0
     # reserved-pool savings: the autoscaled timeline beats the burst-peak
-    # fixed pool even before per-task billing
-    assert jit["pool_container_seconds"] == pytest.approx(34552.6, abs=0.1)
-    assert jit["pool_savings_vs_fixed_pct"] == pytest.approx(30.31, abs=0.01)
+    # fixed pool even before per-task billing (larger than pre-fix: the
+    # capacity-at-event-time occupancy integral scales down sooner)
+    assert jit["pool_container_seconds"] == pytest.approx(24372.2, abs=0.1)
+    assert jit["pool_savings_vs_fixed_pct"] == pytest.approx(50.85, abs=0.01)
     assert jit["pool_savings_vs_fixed_pct"] > 25.0
+
+
+# --------------------------------------------------------------------------
+# the saturation acceptance cell: class-rank pool priorities protect gold
+# --------------------------------------------------------------------------
+def test_saturation_cell_class_ranks_protect_gold(saturation_rows):
+    classed = saturation_rows["jit-classed"]
+    classless = saturation_rows["jit-classless"]
+    ao = saturation_rows["eager_ao-fixed"]
+    # admission is wide open (nothing queues or sheds): pool scheduling
+    # is the ONLY difference between the variants
+    for r in (classed, classless, ao):
+        assert (r["arrived"], r["admitted"], r["queued"], r["shed"]) \
+            == (24, 24, 0, 0)
+    assert classed["rounds"] == classless["rounds"] == 96
+    # the acceptance claim: class-rank priorities hold gold inside its
+    # declared 60s band on a pool saturated well below demand ...
+    assert classed["gold_attained"] is True
+    assert classed["gold_p95_lateness_s"] == pytest.approx(35.105, abs=0.01)
+    assert classed["gold_p95_lateness_s"] <= classed["gold_band_s"] == 60.0
+    # ... while the identical stream with every rank zeroed blows it 5x
+    assert classless["gold_attained"] is False
+    assert classless["gold_p95_lateness_s"] == pytest.approx(
+        311.961, abs=0.01)
+    # silver/best_effort absorb every §5.5 preemption; gold suffers none
+    assert classed["gold_preemptions"] == 0
+    assert classed["silver_preemptions"] == 30
+    assert classed["best_effort_preemptions"] == 13
+    # the JIT savings floor still holds under saturation
+    assert classed["container_seconds"] <= 0.40 * ao["container_seconds"]
+    assert classed["savings_vs_ao_pct"] == pytest.approx(78.68, abs=0.01)
 
 
 @pytest.mark.slow
 def test_online_long_burst_scenario():
     """Nightly: repeated trace cycles under two diurnal periods of 3x
-    burst. Savings hold; gold does NOT attain its band — sustained
-    overload needs SLA-class-aware pool priorities (ROADMAP deferred),
-    admission alone can't protect it."""
+    burst, heavy drains on a pool capped below burst demand. Savings
+    hold, and — promoted from nightly-observed to a guarded check —
+    class-rank pool priorities keep gold inside its declared band at its
+    calibration floor, with silver/best_effort absorbing every
+    preemption. The identical stream with ranks zeroed melts down."""
     from benchmarks import online as bench
 
     rows = {v: bench.serve_variant(bench.LONG, v, s, a)
@@ -465,4 +575,14 @@ def test_online_long_burst_scenario():
     assert (jit["arrived"], jit["admitted"], jit["shed"]) == (48, 34, 14)
     assert jit["container_seconds"] <= 0.40 * ao["container_seconds"]
     assert jit["scale_ups"] > 0 and jit["scale_downs"] > 0
-    assert jit["gold_attained"] is False  # the honest deferred finding
+    # the promoted gold-band guard (previously asserted attained False —
+    # the deferred finding class-aware pool priorities now close)
+    assert jit["gold_attained"] is True
+    assert jit["gold_p95_lateness_s"] <= jit["gold_band_s"] == 700.0
+    assert jit["gold_preemptions"] == 0
+    assert jit["silver_preemptions"] + jit["best_effort_preemptions"] > 0
+    # ranks zeroed on the identical stream: gold blows the band by >10x
+    classless = bench.serve_variant(bench.LONG, "jit-classless", "jit",
+                                    True, classless=True)
+    assert classless["gold_attained"] is False
+    assert classless["gold_p95_lateness_s"] > 10 * jit["gold_band_s"]

@@ -75,7 +75,7 @@ HEADER = ("strategy,n_jobs,pattern,capacity,horizon_rounds,rounds,"
 def simulate(n_jobs: int, pattern: str, strategy: str, *, seed: int = 0,
              capacity: Optional[int] = None,
              horizon_rounds: Optional[int] = None,
-             t_pair_s: float = 0.05) -> Dict:
+             t_pair_s: float = 0.05, tracer=None) -> Dict:
     trace = synthetic_fleet(n_jobs, pattern, seed=seed,
                             cluster_capacity=capacity,
                             horizon_rounds=horizon_rounds)
@@ -83,10 +83,17 @@ def simulate(n_jobs: int, pattern: str, strategy: str, *, seed: int = 0,
     platform = Platform(
         ClusterConfig(capacity=capacity),
         AggregationEstimator(t_pair_s=t_pair_s),
+        tracer=tracer,
     )
     runner = platform.submit_fleet(trace, strategy=strategy)
     platform.run()
     assert runner.all_done, (strategy, n_jobs, pattern)
+    if tracer is not None:
+        mismatches = tracer.reconcile(platform.cluster)
+        if mismatches:
+            raise SystemExit(
+                "trace/billing reconciliation FAILED for "
+                f"{strategy}/{n_jobs}/{pattern}: " + "; ".join(mismatches))
     fleet = runner.result().fleet
     return {
         "strategy": strategy,
@@ -149,6 +156,17 @@ def run(smoke: bool = False, full: bool = False) -> List[Dict]:
     return rows
 
 
+def export_trace_artifact(path: str) -> int:
+    """Re-run the golden 16-job mixed jit cell with tracing on, reconcile
+    the trace against the billed ledger, and export a Perfetto-loadable
+    chrome trace. Returns the number of chrome events written."""
+    from repro.obs import Tracer
+
+    tracer = Tracer()
+    simulate(16, "mixed", "jit", tracer=tracer)
+    return tracer.export_chrome(path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -159,6 +177,9 @@ def main() -> None:
                          "patterns, long-horizon diurnal traces (slower)")
     ap.add_argument("--out", default="BENCH_fleet.json",
                     help="write rows as JSON here ('' to skip)")
+    ap.add_argument("--trace-out", default="",
+                    help="re-run the golden 16-job mixed jit cell traced "
+                         "and write a Perfetto-loadable chrome trace here")
     args = ap.parse_args()
     print(HEADER)
     rows = run(smoke=args.smoke, full=args.full)
@@ -167,6 +188,9 @@ def main() -> None:
             json.dump({"bench": "fleet", "smoke": args.smoke, "rows": rows},
                       f, indent=1)
         print(f"[wrote {args.out}: {len(rows)} rows]")
+    if args.trace_out:
+        n = export_trace_artifact(args.trace_out)
+        print(f"[wrote {args.trace_out}: {n} trace events, reconciled]")
 
 
 if __name__ == "__main__":

@@ -213,8 +213,11 @@ def assign_sla(jt, idx: int) -> str:
 
 
 def serve_variant(scenario: Scenario, variant: str, strategy: str,
-                  autoscaled: bool, classless: bool = False) -> Dict:
-    """Run one variant of the scenario to quiescence."""
+                  autoscaled: bool, classless: bool = False,
+                  trace=None) -> Dict:
+    """Run one variant of the scenario to quiescence. ``trace`` (a
+    ``repro.obs.Tracer``) records the run; traced container-seconds are
+    reconciled against the billed ledger before returning."""
     platform = Platform(
         ClusterConfig(capacity=2 if autoscaled else scenario.max_capacity),
         AggregationEstimator(t_pair_s=scenario.t_pair_s),
@@ -229,8 +232,15 @@ def serve_variant(scenario: Scenario, variant: str, strategy: str,
         admission=AdmissionConfig(burst_window_s=scenario.burst_window_s,
                                   burst_arrivals=scenario.burst_arrivals),
         window_s=scenario.window_s,
+        trace=trace,
     )
     report = svc.drain()
+    if trace is not None:
+        mismatches = trace.reconcile(platform.cluster)
+        if mismatches:
+            raise SystemExit(
+                "trace/billing reconciliation FAILED for "
+                f"{scenario.name}/{variant}: " + "; ".join(mismatches))
     att = report.sla_attainment(ladder)
     classes = report.classes
     arrived = sum(st.arrived for st in classes.values())
@@ -321,6 +331,18 @@ def class_report(rows: List[Dict]) -> Dict:
     return {"report": "per-class-lateness", "cells": out}
 
 
+def export_trace_artifact(path: str, scenario: Scenario = SMOKE) -> int:
+    """Re-run the jit-autoscaled variant of ``scenario`` with tracing on,
+    reconcile the trace against the billed ledger, and export a
+    Perfetto/chrome-trace JSON artifact. Returns the number of chrome
+    events written (serve_variant raises SystemExit on mismatch)."""
+    from repro.obs import Tracer
+
+    tracer = Tracer()
+    serve_variant(scenario, "jit-autoscaled", "jit", True, trace=tracer)
+    return tracer.export_chrome(path)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -333,6 +355,9 @@ def main() -> None:
     ap.add_argument("--classes-out", default="",
                     help="also write the per-class lateness/preemption "
                          "report here (the nightly artifact)")
+    ap.add_argument("--trace-out", default="",
+                    help="re-run the burst jit-autoscaled cell traced and "
+                         "write a Perfetto-loadable chrome trace here")
     args = ap.parse_args()
     print(HEADER)
     rows = run(smoke=args.smoke, full=args.full)
@@ -345,6 +370,9 @@ def main() -> None:
         with open(args.classes_out, "w") as f:
             json.dump(class_report(rows), f, indent=1)
         print(f"[wrote {args.classes_out}]")
+    if args.trace_out:
+        n = export_trace_artifact(args.trace_out)
+        print(f"[wrote {args.trace_out}: {n} trace events, reconciled]")
 
 
 if __name__ == "__main__":

@@ -82,10 +82,15 @@ class Platform:
         estimator: Optional[AggregationEstimator] = None,
         *,
         t_pair_s: float = 0.05,
+        tracer=None,
     ):
         self.sim = Simulator()
         self.cluster_config = cluster_config or ClusterConfig()
-        self.cluster = Cluster(self.sim, self.cluster_config)
+        # sim-time tracing (repro.obs): pass a ``Tracer`` to record
+        # spans/events from every vehicle sharing this cluster; the default
+        # is the free no-op singleton (goldens bit-identical)
+        self.cluster = Cluster(self.sim, self.cluster_config, tracer=tracer)
+        self.tracer = self.cluster.tracer
         self._estimator_explicit = estimator is not None
         self.estimator = estimator or AggregationEstimator(t_pair_s)
         self.engines: Dict[str, RoundEngine] = {}
@@ -259,6 +264,7 @@ class Platform:
         round_gap_s: float = 1.0,
         priority_policy: str = "deadline",
         recorder=None,
+        trace=None,
     ):
         """Run the Platform as a long-lived service consuming an unbounded
         ``repro.online.ArrivalStream`` instead of a pre-drained trace;
@@ -290,6 +296,12 @@ class Platform:
         admission time). Drive with ``svc.advance``/``svc.drain`` — or
         ``platform.run(until=...)``, which also starts any batch work
         submitted alongside.
+
+        ``trace`` installs a ``repro.obs.Tracer`` on the shared cluster
+        before the controller is built, so admission/autoscale decisions,
+        scheduler rounds and container billing are all recorded
+        (``svc.dashboard()`` then includes a metrics snapshot, and
+        ``trace.export_chrome(path)`` writes a Perfetto-loadable artifact).
         """
         from repro.online.controller import OnlineController  # deferred
 
@@ -297,6 +309,10 @@ class Platform:
             raise RuntimeError(
                 "Platform.run() already called; build a new Platform "
                 "(simulated clusters are single-shot)")
+        if trace is not None:
+            # install before dependents capture cluster.tracer at init
+            self.tracer = trace
+            self.cluster.tracer = trace
         svc = OnlineController(
             self.sim, self.cluster, self.estimator, stream,
             strategy=strategy, sla=sla, sla_classes=sla_classes,

@@ -12,6 +12,7 @@ import itertools
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.events import EventHandle, Simulator
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,9 @@ class Task:
     container_id: Optional[int] = None
     _finish_evt: Optional[EventHandle] = None
     _work_started: Optional[float] = None
+    # tracing only (set under the tracer guard; stays None when disabled):
+    # last submit/requeue time, for the queue-wait histogram
+    submitted_at: Optional[float] = None
 
     @property
     def urgency(self) -> Tuple[int, float]:
@@ -74,9 +78,13 @@ class Task:
 
 
 class Cluster:
-    def __init__(self, sim: Simulator, config: ClusterConfig):
+    def __init__(self, sim: Simulator, config: ClusterConfig, tracer=None):
         self.sim = sim
         self.cfg = config
+        # sim-time tracer (repro.obs). Defaults to the shared no-op
+        # singleton; every emission site is guarded on ``tracer.enabled``
+        # so the disabled hot path costs one attribute read + branch.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # live pool size; starts at the configured capacity and may be
         # resized mid-run by an autoscaler (repro.online). cfg.capacity
         # stays the initial/provisioned value.
@@ -111,6 +119,13 @@ class Cluster:
         t = Task(next(self._ids), job_id, priority, work_s, on_complete,
                  preemptible, class_rank)
         self.pending.append(t)
+        tr = self.tracer
+        if tr.enabled:
+            t.submitted_at = self.sim.now
+            tr.event(self.sim.now, "cluster", "task_submit", job_id,
+                     task=t.task_id, priority=priority,
+                     class_rank=class_rank, work_s=work_s,
+                     preemptible=preemptible)
         self._ensure_tick()
         return t
 
@@ -136,6 +151,11 @@ class Cluster:
         if capacity < 1:
             raise ValueError(f"pool capacity must be >= 1, got {capacity}")
         grew = capacity > self.capacity
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "cluster", "pool_resize", None,
+                     capacity=capacity, prev=self.capacity,
+                     running=len(self.running), pending=len(self.pending))
         self.capacity = capacity
         if grew and self.pending:
             self._ensure_tick()
@@ -197,7 +217,7 @@ class Cluster:
             if not victims:
                 break
             victim = max(victims, key=lambda t: t.order_key)
-            self._preempt(victim)
+            self._preempt(victim, by=cand)
             self._start(self.pending.pop(0))
         if self.pending:
             self._tick_scheduled = True
@@ -210,6 +230,13 @@ class Cluster:
         task.started_at = self.sim.now
         self.record_deploy(task.job_id)
         self.note_container(self.sim.now, +1)
+        tr = self.tracer
+        if tr.enabled:
+            wait = (self.sim.now - task.submitted_at
+                    if task.submitted_at is not None else 0.0)
+            tr.event(self.sim.now, "cluster", "task_start", task.job_id,
+                     task=task.task_id, container=cid, queue_wait_s=wait)
+            tr.metrics.histogram("cluster.queue_wait_s").observe(wait)
         startup = self.cfg.deploy_overhead_s + self.cfg.state_load_s
         task._work_started = self.sim.now + startup
         self.running[task.task_id] = task
@@ -223,6 +250,12 @@ class Cluster:
         self.container_seconds_by_job[task.job_id] = (
             self.container_seconds_by_job.get(task.job_id, 0.0) + dur
         )
+        # the container span carries the exact billed endpoints, so
+        # span-derived per-job totals reconcile with the ledger exactly
+        tr = self.tracer
+        if tr.enabled:
+            tr.span(start, end, "container", "task", job_id=task.job_id,
+                    container_id=task.container_id, task=task.task_id)
 
     def _finish(self, task: Task) -> None:
         # checkpoint result to stable storage, then release the container
@@ -231,12 +264,17 @@ class Cluster:
         def complete():
             self._bill(task, self.sim.now)
             self.note_container(self.sim.now, -1)
+            tr = self.tracer
+            if tr.enabled:
+                tr.event(self.sim.now, "cluster", "task_finish",
+                         task.job_id, task=task.task_id,
+                         container=task.container_id)
             task.on_complete(self.sim.now)
             self._ensure_tick()
 
         self.sim.schedule(self.cfg.checkpoint_s, complete)
 
-    def _preempt(self, task: Task) -> None:
+    def _preempt(self, task: Task, by: Optional[Task] = None) -> None:
         assert task._finish_evt is not None
         task._finish_evt.cancel()
         self.n_preemptions += 1
@@ -251,6 +289,16 @@ class Cluster:
         self.running.pop(task.task_id, None)
         # checkpoint the partially-aggregated state (§5.5), bill, requeue
         end = self.sim.now + self.cfg.checkpoint_s
+        tr = self.tracer
+        if tr.enabled:
+            # cause: the strictly-higher-urgency pending task that evicted
+            # us (None only when preempted outside the §5.5 tick path)
+            tr.event(self.sim.now, "cluster", "preempt", task.job_id,
+                     task=task.task_id, container=task.container_id,
+                     remaining_work_s=task.work_s, release_t=end,
+                     by_job=by.job_id if by is not None else None,
+                     by_task=by.task_id if by is not None else None,
+                     by_urgency=list(by.urgency) if by is not None else None)
         self._bill(task, end)
         self.note_container(end, -1)
         task.started_at = None
@@ -259,6 +307,11 @@ class Cluster:
 
     def _requeue(self, task: Task) -> None:
         self.pending.append(task)
+        tr = self.tracer
+        if tr.enabled:
+            task.submitted_at = self.sim.now
+            tr.event(self.sim.now, "cluster", "task_requeue", task.job_id,
+                     task=task.task_id, remaining_work_s=task.work_s)
         self._ensure_tick()
 
 
@@ -289,4 +342,9 @@ class AlwaysOnContainer:
         self.cluster.container_seconds_by_job[self.job_id] = (
             self.cluster.container_seconds_by_job.get(self.job_id, 0.0) + dur
         )
+        tr = self.cluster.tracer
+        if tr.enabled:
+            tr.span(self.start_t, self.cluster.sim.now, "container",
+                    "always_on", job_id=self.job_id,
+                    work_done_s=self.work_done)
         return dur

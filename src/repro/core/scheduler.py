@@ -139,6 +139,9 @@ class JITScheduler:
         assert priority_policy in ("deadline", "fifo"), priority_policy
         self.sim = sim
         self.cluster = cluster
+        # sim-time tracer (repro.obs) — shared with the cluster, emission
+        # guarded on ``enabled`` (free when disabled)
+        self.tracer = cluster.tracer
         self.est = estimator
         self.queue = queue or MessageQueue()
         self.jobs: Dict[str, JobState] = {}
@@ -198,6 +201,11 @@ class JITScheduler:
         st.timer = self.sim.schedule_at(
             st.deadline, lambda j=job_id: self.timer_alert(j)
         )  # line 18
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "scheduler", "round_open", job_id,
+                     round=st.round_idx, t_rnd=st.t_rnd, t_agg=st.t_agg,
+                     deadline=st.deadline, gated=st.gated)
         if self.on_round_start:
             self.on_round_start(job_id, st.round_idx)
 
@@ -206,6 +214,12 @@ class JITScheduler:
         st = self.jobs.get(job_id)
         if st is None:
             return
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "scheduler", "deadline_fire", job_id,
+                     round=st.round_idx, armed=st.gated,
+                     arrived=st.arrived, expected=st.expected,
+                     in_flight=st.task is not None)
         if st.gated:
             st.armed = True
             st.timer = None
@@ -251,11 +265,45 @@ class JITScheduler:
         if st.timer:
             st.timer.cancel()
         observed = t - st.round_start - max(0.0, st.t_rnd - st.t_agg)
-        self.est.calibrate(max(observed, 1e-6), st.job, st.job.quorum)
+        self._calibrate(st, t, max(observed, 1e-6), st.job.quorum)
         st.lateness.append(sla_lateness(t, st.round_start, st.t_rnd))
         self._round_complete(st, t)
 
+    def _calibrate(self, st: JobState, t: float, observed_t_agg: float,
+                   n_updates: int) -> None:
+        """§5.4 estimator calibration, traced before→after so a future
+        t_pair ratchet (the PR 5 bug class) is visible in one glance."""
+        tr = self.tracer
+        if not tr.enabled:
+            self.est.calibrate(observed_t_agg, st.job, n_updates)
+            return
+        t_pair_before = self.est.t_pair_s
+        t_agg_before = self.est.t_agg(st.job)
+        self.est.calibrate(observed_t_agg, st.job, n_updates)
+        tr.event(t, "calibration", "t_pair", st.job.job_id,
+                 round=st.round_idx, observed_t_agg_s=observed_t_agg,
+                 n_updates=n_updates, t_pair_before=t_pair_before,
+                 t_pair_after=self.est.t_pair_s,
+                 t_agg_before=t_agg_before,
+                 t_agg_after=self.est.t_agg(st.job))
+
     def _round_complete(self, st: JobState, t: float) -> None:
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(t, "scheduler", "round_close", st.job.job_id,
+                     round=st.round_idx, aggregated=st.aggregated,
+                     no_shows_round=max(st.job.n_parties - st.expected, 0)
+                     if st.gated else 0,
+                     last_lateness_s=st.lateness[-1]
+                     if st.lateness else None,
+                     last_latency_s=st.latencies[-1]
+                     if st.latencies else None)
+            if st.lateness:
+                tr.metrics.histogram(
+                    "scheduler.round_lateness_s").observe(st.lateness[-1])
+            if st.latencies:
+                tr.metrics.histogram(
+                    "scheduler.round_latency_s").observe(st.latencies[-1])
         st.finished_at = t
         st.done_rounds += 1
         st.round_idx += 1
@@ -298,6 +346,12 @@ class JITScheduler:
         (online t_upd/t_rnd learning) and gate this round's drain on it."""
         self.observe_update(job_id, party_id, train_time_s)
         st = self.jobs[job_id]
+        tr = self.tracer
+        if tr.enabled:
+            # one predictor observation per arrival (legacy per-event path)
+            tr.event(self.sim.now, "scheduler", "update_arrival", job_id,
+                     party=party_id, train_s=train_time_s,
+                     round=st.round_idx)
         if not st.gated:
             return
         st.arrived += 1
@@ -344,6 +398,13 @@ class JITScheduler:
             # the fused-model broadcast is paid once per round (§5.4 comm)
             work += st.job.model_bytes / self.est.resources.intra_dc_bw
         st.submitted += backlog
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "scheduler", "drain_submit",
+                     st.job.job_id, round=st.round_idx, k=backlog,
+                     work_s=work, armed=st.armed, all_in=all_in,
+                     first=st.first_drain_t == self.sim.now)
+            tr.metrics.histogram("scheduler.drain_k").observe(backlog)
         st.task = self.cluster.submit(
             st.job.job_id,
             priority=float("-inf") if st.armed else self._priority(st),
@@ -416,6 +477,13 @@ class JITScheduler:
         # which point the legacy per-arrival feed has the same state
         if len(present_idx):
             st.predictor.observe_batch(present_idx, train_times)
+            tr = self.tracer
+            if tr.enabled:
+                # one batch predictor observation per presampled round
+                tr.event(self.sim.now, "scheduler",
+                         "predictor_observe_batch", job_id,
+                         round=st.round_idx, n=int(len(present_idx)),
+                         no_shows=int(n_no_shows))
         st.updates_received += int(len(present_idx))
         st.arrival_times = times_sorted
         round_before = st.round_idx
@@ -523,7 +591,7 @@ class JITScheduler:
             begun = max(begun0,
                         st.last_arrival if st.last_arrival is not None
                         else begun0)
-            self.est.calibrate(max(t - begun, 1e-6), st.job, st.aggregated)
+            self._calibrate(st, t, max(t - begun, 1e-6), st.aggregated)
         # the two per-round timeline metrics, shared definitions
         if st.last_arrival is not None:
             st.latencies.append(aggregation_latency(t, st.last_arrival))

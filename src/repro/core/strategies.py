@@ -273,6 +273,9 @@ class RoundEngine:
         policy = as_policy(policy)
         job.validate()
         self.sim, self.cluster, self.job = sim, cluster, job
+        # sim-time tracer (repro.obs) — shared with the cluster, emission
+        # guarded on ``enabled`` (free when disabled)
+        self.tracer = cluster.tracer
         self.est = estimator
         self.policy = policy
         self.strategy = policy.strategy  # name, for metrics / back-compat
@@ -343,6 +346,11 @@ class RoundEngine:
         self._reset_round_state()
         self._refresh_fuse_cost()
         self.round_start = self.sim.now
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "engine", "round_open", self.job.job_id,
+                     round=self.round, strategy=self.strategy,
+                     round_target=self.round_target)
         self.arrivals.start_round(self.round)
         # schedule this round's update arrivals (unless driven externally,
         # e.g. by edge-tier aggregators in the hierarchical topology)
@@ -440,6 +448,11 @@ class RoundEngine:
         self.task_active = True
         if self.round_deploy_t is None:
             self.round_deploy_t = self.sim.now
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "engine", "drain_submit",
+                     self.job.job_id, round=self.round, k=k,
+                     work_s=k * self.w_u, strategy=self.strategy)
         self.cluster.submit(
             self.job.job_id,
             priority=self.sim.now,  # FIFO among serverless tasks
@@ -459,6 +472,11 @@ class RoundEngine:
         self.cluster.record_deploy(self.job.job_id)
         self.cluster.note_container(self.sim.now, +1)
         self.metrics.jit_deploys += 1
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "engine", "stream_deploy",
+                     self.job.job_id, round=self.round,
+                     pending=len(self.pending), strategy=self.strategy)
         self.stream_start_t = self.sim.now
         self.stream_busy_until = self.sim.now + self.oh_startup
         self.stream_feed()
@@ -485,6 +503,13 @@ class RoundEngine:
         self.cluster.container_seconds_by_job[self.job.job_id] = (
             self.cluster.container_seconds_by_job.get(self.job.job_id, 0.0) + dur
         )
+        # the span carries the exact billed endpoints (start → end-of-
+        # checkpoint), so traced totals reconcile with the ledger exactly
+        tr = self.tracer
+        if tr.enabled:
+            tr.span(start, end, "container", "stream",
+                    job_id=self.job.job_id, round=self.round,
+                    strategy=self.strategy)
         self.stream_deployed = False
         self.stream_start_t = None
         return end
@@ -526,6 +551,12 @@ class RoundEngine:
 
     def _round_complete(self):
         done = self.impl.finish_round()
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(done, "engine", "round_close", self.job.job_id,
+                     round=self.round, strategy=self.strategy,
+                     arrived=self.arrived, processed=self.processed,
+                     round_target=self.round_target)
         if self.last_arrival is not None:
             # §6.2 latency is measured from the true last arrival; a round
             # with zero arrivals contributes none (scheduler-vehicle parity)
@@ -734,6 +765,13 @@ class JIT(AggregationStrategy):
         e.metrics.predictions.append((t_rnd_sla, t_agg))
         self.priority = e.round_start + trigger  # §5.5 priority
         self._trigger_abs = e.round_start + trigger
+        tr = e.tracer
+        if tr.enabled:
+            # the per-round strategy decision: where JIT planted its trigger
+            tr.event(e.sim.now, "engine", "jit_plan", e.job.job_id,
+                     round=e.round, t_rnd=t_rnd_sla, t_agg=t_agg,
+                     trigger_abs=self._trigger_abs,
+                     jit_policy=self.policy.jit_policy)
         self._timer = e.sim.schedule(trigger, self._timer_fire)
 
     # ---- prediction of the round end ------------------------------------
@@ -865,8 +903,22 @@ class JIT(AggregationStrategy):
             e = self.engine
             last = (self._trigger_abs if e.last_arrival is None
                     else e.last_arrival)
-            e.est.calibrate(done - max(self._trigger_abs, last),
-                            e.job, max(e.processed, 1))
+            tr = e.tracer
+            if not tr.enabled:
+                e.est.calibrate(done - max(self._trigger_abs, last),
+                                e.job, max(e.processed, 1))
+            else:
+                before = e.est.t_pair_s
+                e.est.calibrate(done - max(self._trigger_abs, last),
+                                e.job, max(e.processed, 1))
+                tr.event(done, "calibration", "t_pair", e.job.job_id,
+                         round=e.round,
+                         observed_t_agg_s=done - max(self._trigger_abs,
+                                                     last),
+                         n_updates=max(e.processed, 1),
+                         t_pair_before=before,
+                         t_pair_after=e.est.t_pair_s,
+                         t_agg_after=e.est.t_agg(e.job))
         return done
 
 

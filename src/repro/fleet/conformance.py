@@ -32,7 +32,13 @@ invariants and returns a ``CellReport``:
      over the jobs), the rank-0 (gold) jobs' pooled §5.5 p95 lateness on
      the scheduler vehicle stays inside the declared
      ``gold_p95_lateness_band_s`` — class-rank pool priorities defended
-     under genuine drain contention.
+     under genuine drain contention;
+  5. **trace/billing reconciliation** — every vehicle runs under a
+     ``repro.obs.Tracer``, and the container-seconds recomputed from its
+     billed spans must equal the cluster's per-job ledger exactly (the
+     trace as billing-correctness oracle). Failed cells attach the last
+     N trace events per job to the ``CellReport`` so a nightly failure
+     is diagnosable from the uploaded artifact alone.
 
 Capacity tiers: ``default`` is the benchmark pool (8 containers, fast
 fuse); ``tiny`` is an under-provisioned pool (2 containers, multi-second
@@ -207,6 +213,10 @@ class CellSpec:
             horizon_rounds=self.horizon_rounds)
 
 
+#: events per job attached to a failed cell's trace excerpt
+TRACE_EXCERPT_EVENTS = 20
+
+
 @dataclasses.dataclass
 class VehicleRun:
     """One strategy's run of a cell trace on its execution vehicle."""
@@ -215,16 +225,21 @@ class VehicleRun:
     vehicle: str  # "scheduler" | "engine"
     arrivals: ArrivalLog
     result: FleetResult
+    tracer: Optional[object] = None  # repro.obs.Tracer when traced
 
 
 @dataclasses.dataclass
 class CellReport:
     """One conformance cell: the per-strategy runs and every violated
-    invariant (empty ``failures`` == the cell conforms)."""
+    invariant (empty ``failures`` == the cell conforms). Failed cells
+    carry ``trace_excerpts``: strategy -> job -> the cell's last
+    ``TRACE_EXCERPT_EVENTS`` trace events for that job."""
 
     spec: CellSpec
     runs: Dict[str, VehicleRun]
     failures: List[str]
+    trace_excerpts: Dict[str, Dict[str, List[Dict[str, object]]]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def passed(self) -> bool:
@@ -279,11 +294,16 @@ def _first_divergence(a: ArrivalLog, b: ArrivalLog) -> str:
 def run_cell(
     spec: CellSpec,
     strategies: Tuple[str, ...] = CONFORMANCE_STRATEGIES,
+    trace_runs: bool = True,
 ) -> CellReport:
     """Run one matrix cell through every strategy's vehicle and check the
     paired invariants. Each strategy gets a fresh platform (simulated
-    clusters are single-shot) but the identical trace and party seeds."""
+    clusters are single-shot) but the identical trace and party seeds.
+    With ``trace_runs`` (the default) every vehicle records a
+    ``repro.obs`` trace, which is reconciled against the billed ledger as
+    invariant 5 and excerpted onto the report if the cell fails."""
     from repro.api import Platform  # deferred: api imports repro.fleet
+    from repro.obs import Tracer
 
     runs: Dict[str, VehicleRun] = {}
     failures: List[str] = []
@@ -297,9 +317,11 @@ def run_cell(
         def recorder(job_id, pid, round_idx, sample, _log=log):
             _log.setdefault((job_id, pid), []).append(sample)
 
+        tracer = Tracer() if trace_runs else None
         platform = Platform(
             ClusterConfig(capacity=spec.capacity),
             AggregationEstimator(t_pair_s=spec.t_pair_s),
+            tracer=tracer,
         )
         runner = platform.submit_fleet(
             trace, strategy=strategy, recorder=recorder, rng=spec.rng,
@@ -308,14 +330,28 @@ def run_cell(
         if not runner.all_done:
             failures.append(f"[{spec.name}] {strategy}: fleet did not run "
                             f"every job to completion")
+        if tracer is not None:
+            # invariant 5: span-derived container-seconds and preempt
+            # events must reconcile with the cluster's billed ledgers
+            failures.extend(
+                f"[{spec.name}] {strategy}: trace/billing: {msg}"
+                for msg in tracer.reconcile(platform.cluster))
         runs[strategy] = VehicleRun(
             strategy=strategy,
             vehicle="scheduler" if strategy == "jit" else "engine",
             arrivals=log,
             result=runner.result(),
+            tracer=tracer,
         )
     failures.extend(check_invariants(spec, runs, class_rank_of=ranks))
-    return CellReport(spec=spec, runs=runs, failures=failures)
+    excerpts: Dict[str, Dict[str, List[Dict[str, object]]]] = {}
+    if failures and trace_runs:
+        excerpts = {
+            strategy: run.tracer.tail_by_job(TRACE_EXCERPT_EVENTS)
+            for strategy, run in runs.items() if run.tracer is not None
+        }
+    return CellReport(spec=spec, runs=runs, failures=failures,
+                      trace_excerpts=excerpts)
 
 
 def check_invariants(spec: CellSpec,
@@ -467,8 +503,56 @@ def run_matrix(cells: Optional[List[CellSpec]] = None,
             for spec in (cells if cells is not None else default_matrix())]
 
 
-def main() -> int:
-    reports = run_matrix()
+def export_traces(reports: List[CellReport], out_dir: str) -> List[str]:
+    """Write one Perfetto-loadable chrome trace per (cell, strategy) run
+    into ``out_dir`` (created if missing), plus a ``failures.json`` with
+    the per-job trace excerpts of every failed cell. Returns the paths."""
+    import json
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    paths: List[str] = []
+    failed: Dict[str, object] = {}
+    for rep in reports:
+        slug = rep.spec.name.replace("/", "_")
+        for strategy, run in rep.runs.items():
+            if run.tracer is None:
+                continue
+            path = os.path.join(out_dir, f"{slug}-{strategy}.json")
+            run.tracer.export_chrome(path)
+            paths.append(path)
+        if rep.failures:
+            failed[rep.spec.name] = {
+                "failures": rep.failures,
+                "trace_excerpts": rep.trace_excerpts,
+            }
+    if failed:
+        path = os.path.join(out_dir, "failures.json")
+        with open(path, "w") as f:
+            json.dump(failed, f, indent=1)
+        paths.append(path)
+    return paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="run a conformance matrix and report per-cell "
+                    "invariant failures")
+    ap.add_argument("--matrix", default="default",
+                    choices=("default", "vectorized", "long-horizon"),
+                    help="which declared cell matrix to run")
+    ap.add_argument("--trace-out", default="",
+                    help="directory for per-(cell, strategy) chrome traces "
+                         "and failed-cell excerpts (nightly artifact)")
+    args = ap.parse_args(argv)
+    cells = {
+        "default": default_matrix,
+        "vectorized": vectorized_matrix,
+        "long-horizon": long_horizon_matrix,
+    }[args.matrix]()
+    reports = run_matrix(cells)
     bad = 0
     for rep in reports:
         print(rep.summary())
@@ -477,6 +561,9 @@ def main() -> int:
             bad += 1
     print(f"{len(reports)} cells, "
           f"{sum(1 for r in reports if r.passed)} conforming")
+    if args.trace_out:
+        paths = export_traces(reports, args.trace_out)
+        print(f"[wrote {len(paths)} trace artifacts to {args.trace_out}]")
     return 1 if bad else 0
 
 

@@ -1,0 +1,24 @@
+"""``repro.obs`` — sim-time tracing, metrics, and the live dashboard.
+
+Zero-overhead when disabled: every component defaults to the shared
+``NULL_TRACER`` singleton and guards emission on ``tracer.enabled``.
+Enable by passing a ``Tracer`` via ``Platform(tracer=...)`` or
+``Platform.serve(..., trace=...)``; export with
+``tracer.export_chrome(path)`` (Perfetto-loadable) and reconcile billing
+with ``tracer.reconcile(cluster)``.
+"""
+from repro.obs.dashboard import DashboardView
+from repro.obs.registry import Counter, Histogram, MetricsRegistry
+from repro.obs.trace import NULL_TRACER, NullTracer, Span, TraceEvent, Tracer
+
+__all__ = [
+    "Counter",
+    "DashboardView",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "TraceEvent",
+    "Tracer",
+]

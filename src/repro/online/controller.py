@@ -59,6 +59,7 @@ from repro.core.events import EventHandle, Simulator
 from repro.core.metrics import FleetMetrics, JobMetrics, percentile
 from repro.fleet.fleet import FleetRunner
 from repro.fleet.traces import JobTrace, WorkloadTrace
+from repro.obs.dashboard import DashboardView
 from repro.online.stream import ArrivalStream
 from repro.online.window import WindowedFleetMetrics, WindowStats
 
@@ -328,6 +329,10 @@ class OnlineController:
     ):
         self.sim = sim
         self.cluster = cluster
+        # sim-time tracer (repro.obs) — shared with the cluster, emission
+        # guarded on ``enabled`` (free when disabled). Set it before the
+        # controller is built (``Platform.serve(trace=...)``).
+        self.tracer = cluster.tracer
         self.stream = stream
         self.auto = autoscaler or AutoscalerConfig()
         self.adm = admission or AdmissionConfig()
@@ -419,6 +424,60 @@ class OnlineController:
         """Completed metric windows so far (mid-run safe)."""
         return self.windows.snapshot()
 
+    def dashboard(self, last_windows: int = 5) -> DashboardView:
+        """A structured live view of the service at the current sim time:
+        per-class admission/backlog/preemptions, pool occupancy, and the
+        trailing window summaries from ``poll()``. Mid-run safe (advance,
+        ``dashboard()``, advance again); pool occupancy is instantaneous
+        (running / capacity) — the autoscaler's trailing-mean integrator is
+        stateful and is not consumed here."""
+        now = self.sim.now
+        raw, weighted = self._weighted_backlog()
+        queue_by_class: Dict[str, int] = {}
+        for _, _, _, name, _ in self._queue:
+            queue_by_class[name] = queue_by_class.get(name, 0) + 1
+        preempts = self._preemptions_by_class()
+        classes: Dict[str, Dict[str, object]] = {}
+        for name, st in sorted(self.stats.items()):
+            view = st.summary()
+            view["preemptions"] = preempts.get(name, 0)
+            view["queue_depth_now"] = queue_by_class.get(name, 0)
+            classes[name] = view
+        running = len(self.cluster.running)
+        cap = self.cluster.capacity
+        admitted_total = sum(st.admitted for st in self.stats.values())
+        tr = self.tracer
+        return DashboardView(
+            t=now,
+            strategy=self.strategy_name,
+            done=self._done,
+            pool={
+                "capacity": cap,
+                "running": running,
+                "pending": len(self.cluster.pending),
+                "occupancy": running / cap if cap else 0.0,
+                "peak": max(c for _, c in self.pool_timeline),
+                "scale_ups": self.n_scale_ups,
+                "scale_downs": self.n_scale_downs,
+            },
+            backlog={"raw": float(raw), "weighted": weighted},
+            admission={
+                "burst": len(self._arrivals) > self.adm.burst_arrivals,
+                "window_arrivals": len(self._arrivals),
+                "queue_depth": len(self._queue),
+                "queue_limit": self.adm.queue_limit,
+            },
+            classes=classes,
+            jobs={
+                "arrived": self._arrived_n,
+                "active": len(self._active),
+                "completed": admitted_total - len(self._active),
+                "shed": len(self.shed_jobs),
+            },
+            windows=[w.summary() for w in self.poll()[-last_windows:]],
+            metrics=tr.snapshot(now) if tr.enabled else None,
+        )
+
     @property
     def done(self) -> bool:
         return self._done
@@ -464,14 +523,20 @@ class OnlineController:
         st.arrived += 1
         burst = len(self._arrivals) > self.adm.burst_arrivals
         if burst and cls.shed_under_burst:
-            self._shed(jt, st)
+            self._shed(jt, st, reason="burst")
         elif burst and cls.queue_under_burst:
             if len(self._queue) >= self.adm.queue_limit:
-                self._shed(jt, st)  # queue overflow
+                self._shed(jt, st, reason="queue_full")
             else:
                 heapq.heappush(self._queue, (cls.rank, next(self._queue_seq),
                                              now, name, jt))
                 self.windows.observe_admission("queued")
+                tr = self.tracer
+                if tr.enabled:
+                    tr.event(now, "online", "queue", jt.job_id, cls=name,
+                             burst=burst,
+                             window_arrivals=len(self._arrivals),
+                             queue_depth=len(self._queue))
         else:
             self._admit(jt, st)
         self._pull_next()
@@ -482,10 +547,17 @@ class OnlineController:
         while self._arrivals and self._arrivals[0] <= cutoff:
             self._arrivals.popleft()
 
-    def _shed(self, jt: JobTrace, st: ClassStats) -> None:
+    def _shed(self, jt: JobTrace, st: ClassStats,
+              reason: str = "burst") -> None:
         st.shed += 1
         self.shed_jobs.append(jt.job_id)
         self.windows.observe_admission("shed")
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "online", "shed", jt.job_id,
+                     cls=st.name, reason=reason,
+                     window_arrivals=len(self._arrivals),
+                     queue_depth=len(self._queue))
 
     def _admit(self, jt: JobTrace, st: ClassStats,
                queued_since: Optional[float] = None) -> None:
@@ -500,6 +572,13 @@ class OnlineController:
             st.queued += 1
             st.queue_wait_s.append(self.sim.now - queued_since)
         self.windows.observe_admission("admitted")
+        tr = self.tracer
+        if tr.enabled:
+            tr.event(self.sim.now, "online", "admit", jt.job_id,
+                     cls=st.name, queued=queued_since is not None,
+                     queue_wait_s=(self.sim.now - queued_since
+                                   if queued_since is not None else 0.0),
+                     window_arrivals=len(self._arrivals))
         if self._on_admitted is not None:
             self._on_admitted(jt.job_id)
 
@@ -586,6 +665,10 @@ class OnlineController:
         pending = len(self.cluster.pending)
         backlog, weighted = self._weighted_backlog()
         occ = self._mean_occupancy(now)
+        tr = self.tracer
+        if tr.enabled:
+            tr.metrics.histogram("online.weighted_backlog").observe(weighted)
+            tr.metrics.histogram("online.occupancy").observe(occ)
         if (pending >= self.auto.scale_up_pending
                 or weighted >= self.auto.scale_up_backlog):
             self._idle_ticks = 0
@@ -593,6 +676,12 @@ class OnlineController:
                 new = min(self._max_capacity, cap + self.auto.scale_up_step)
                 self._resize(now, new)
                 self.n_scale_ups += 1
+                if tr.enabled:
+                    # the decision AND the signals that drove it
+                    tr.event(now, "online", "scale_up", None,
+                             capacity=new, prev=cap, pending=pending,
+                             backlog=backlog, weighted_backlog=weighted,
+                             occupancy=occ)
         elif (pending == 0 and backlog < self.auto.scale_up_backlog
               and occ <= self.auto.scale_down_occupancy):
             # NB not backlog == 0: gated rounds hold arrived-but-unquorate
@@ -606,6 +695,11 @@ class OnlineController:
                 self._resize(now, new)
                 self.n_scale_downs += 1
                 self._idle_ticks = 0
+                if tr.enabled:
+                    tr.event(now, "online", "scale_down", None,
+                             capacity=new, prev=cap, pending=pending,
+                             backlog=backlog, weighted_backlog=weighted,
+                             occupancy=occ)
         else:
             self._idle_ticks = 0
 

@@ -1,0 +1,501 @@
+"""repro.obs: sim-time tracing, the metrics registry, the live dashboard,
+and the trace-as-billing-oracle reconciliation guarantees.
+
+Locks the ISSUE 9 contracts: the disabled hot path is a guarded no-op
+singleton (zero allocation, never even *called*); enabled tracing leaves
+every golden bit-identical while its billed container spans reconcile
+with the cluster ledger exactly; the canonical event order at equal sim
+times is ``(t, seq)``; and the Perfetto/chrome-trace export is
+structurally valid.
+"""
+import gc
+import json
+import sys
+
+import pytest
+
+from repro.api import Platform
+from repro.core import AggregationEstimator, ClusterConfig, Simulator
+from repro.core.cluster import Cluster
+from repro.fleet import synthetic_fleet
+from repro.obs import (
+    Counter,
+    DashboardView,
+    Histogram,
+    MetricsRegistry,
+    NULL_TRACER,
+    NullTracer,
+    Span,
+    TraceEvent,
+    Tracer,
+)
+from repro.online import AutoscalerConfig, TraceStream
+
+
+def _platform(capacity=8, t_pair_s=0.05, tracer=None):
+    return Platform(ClusterConfig(capacity=capacity),
+                    AggregationEstimator(t_pair_s=t_pair_s),
+                    tracer=tracer)
+
+
+def _run_fleet(n_jobs=4, pattern="mixed", strategy="jit", tracer=None,
+               capacity=8, t_pair_s=0.05, rng="pcg64", vectorized=False):
+    trace = synthetic_fleet(n_jobs, pattern, seed=0,
+                            cluster_capacity=capacity)
+    platform = _platform(capacity=capacity, t_pair_s=t_pair_s, tracer=tracer)
+    runner = platform.submit_fleet(trace, strategy=strategy, rng=rng,
+                                   vectorized=vectorized)
+    platform.run()
+    assert runner.all_done
+    return platform, runner
+
+
+# --------------------------------------------------------------------------
+# the disabled path: one shared no-op singleton, guarded call sites
+# --------------------------------------------------------------------------
+def test_null_tracer_is_the_default_everywhere():
+    sim = Simulator()
+    assert Cluster(sim, ClusterConfig(capacity=2)).tracer is NULL_TRACER
+    platform = _platform()
+    assert platform.tracer is NULL_TRACER
+    assert platform.cluster.tracer is NULL_TRACER
+    assert NULL_TRACER.enabled is False
+    assert isinstance(NULL_TRACER, NullTracer)
+    # the no-op methods exist and return None (direct unguarded use is
+    # legal, just not what instrumented hot paths do)
+    assert NULL_TRACER.event(0.0, "cat", "name") is None
+    assert NULL_TRACER.span(0.0, 1.0, "cat", "name") is None
+
+
+def test_disabled_guards_never_call_the_null_tracer(monkeypatch):
+    """Instrumented sites must guard on ``tracer.enabled``, not rely on
+    the null methods being cheap: make them explode, run a preemption-
+    heavy fleet AND an online serve, and nothing may raise."""
+    def boom(*a, **k):  # pragma: no cover - the test is that it never runs
+        raise AssertionError("NullTracer method called on a guarded path")
+
+    monkeypatch.setattr(NullTracer, "event", boom)
+    monkeypatch.setattr(NullTracer, "span", boom)
+    platform, runner = _run_fleet(n_jobs=8, pattern="dropout",
+                                  capacity=2, t_pair_s=2.0)
+    assert platform.cluster.n_preemptions > 0  # the guard saw real traffic
+    trace = synthetic_fleet(3, "steady", seed=0)
+    svc = _platform().serve(
+        TraceStream(trace),
+        autoscaler=AutoscalerConfig(min_capacity=2, max_capacity=8))
+    svc.drain()
+
+
+def test_disabled_hot_path_allocates_nothing():
+    """The guarded pattern — one attribute read plus a branch — must not
+    allocate per iteration (ISSUE 9 zero-overhead-when-disabled)."""
+    tr = NULL_TRACER
+
+    def hot(n):
+        for i in range(n):
+            if tr.enabled:
+                tr.event(1.0, "cluster", "task_submit", "job", task=i)
+    hot(1000)  # warm up any lazy machinery
+    gc.collect()
+    before = sys.getallocatedblocks()
+    hot(10_000)
+    delta = sys.getallocatedblocks() - before
+    assert delta < 10, f"disabled tracer hot path allocated {delta} blocks"
+
+
+# --------------------------------------------------------------------------
+# registry + record types
+# --------------------------------------------------------------------------
+def test_metrics_registry_counters_and_histograms():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2)
+    assert reg.counter("a").n == 3
+    h = reg.histogram("lat")
+    for v in [1.0, 2.0, 3.0, 4.0]:
+        h.observe(v)
+    assert h.percentile(50) == pytest.approx(3.0)  # nearest-rank on 4
+    s = h.summary()
+    assert s["count"] == 4 and s["sum"] == pytest.approx(10.0)
+    assert s["min"] == 1.0 and s["max"] == 4.0
+    snap = reg.snapshot(42.0)
+    assert snap["t"] == 42.0
+    assert snap["counters"] == {"a": 3}
+    assert snap["histograms"]["lat"]["count"] == 4
+    # empty histogram summarises to None quantiles, not crashes
+    assert Histogram("e").summary()["p95"] is None
+    assert Histogram("e").percentile(95) is None
+    assert Counter("c").n == 0
+
+
+def test_tracer_records_and_derived_metrics():
+    tr = Tracer()
+    tr.event(1.0, "scheduler", "round_open", "j1", round=0)
+    tr.event(0.5, "scheduler", "round_open", "j2", round=0)
+    tr.span(0.0, 2.0, "container", "task", job_id="j1", container_id=7)
+    ev = tr.events
+    assert [e.t for e in ev] == [1.0, 0.5]  # emission order
+    assert isinstance(ev[0], TraceEvent) and ev[0].args == {"round": 0}
+    assert [e.t for e in tr.canonical_events()] == [0.5, 1.0]
+    sp = tr.spans[0]
+    assert isinstance(sp, Span) and sp.dur == 2.0 and sp.container_id == 7
+    snap = tr.snapshot(3.0)
+    assert snap["counters"]["scheduler.round_open"] == 2
+    assert snap["counters"]["container.task"] == 1
+    assert snap["histograms"]["container.span_s"]["sum"] == 2.0
+
+
+def test_tracer_max_events_drop_oldest_keeps_counts():
+    tr = Tracer(max_events=2)
+    for i in range(5):
+        tr.event(float(i), "cat", "x", "job")
+    assert len(tr.events) == 2
+    assert [e.t for e in tr.events] == [3.0, 4.0]
+    assert tr.n_dropped_events == 3
+    # drop-aged events still count in the derived counters
+    assert tr.snapshot()["counters"]["cat.x"] == 5
+
+
+def test_tracer_synthetic_container_ids_never_collide_with_pool():
+    tr = Tracer()
+    tr.span(0.0, 1.0, "container", "always_on", job_id="j")
+    tr.span(1.0, 2.0, "container", "stream", job_id="j")
+    cids = [s.container_id for s in tr.spans]
+    assert len(set(cids)) == 2 and all(c >= 1_000_000 for c in cids)
+
+
+def test_tail_by_job_returns_last_n_in_canonical_order():
+    tr = Tracer()
+    for i in range(30):
+        tr.event(float(i), "cluster", "task_submit", "j1", task=i)
+    tr.event(5.0, "cluster", "pool_resize", None, capacity=4)
+    tail = tr.tail_by_job(n=3)
+    assert list(tail) == ["j1"]  # job-less events are skipped
+    assert [e["t"] for e in tail["j1"]] == [27.0, 28.0, 29.0]
+    assert tail["j1"][0]["name"] == "task_submit"
+    assert tail["j1"][-1]["task"] == 29
+
+
+# --------------------------------------------------------------------------
+# canonical event order at equal sim times (the regression lock)
+# --------------------------------------------------------------------------
+def _integrate(deltas):
+    """Busy container-seconds from (t, ±1) deltas (sorting by time; the
+    trace stream is already time-sorted, Cluster.occupancy_events is not
+    guaranteed to be)."""
+    total, level, prev = 0.0, 0, None
+    for t, d in sorted(deltas, key=lambda x: x[0]):
+        if prev is not None:
+            total += level * (t - prev)
+        level += d
+        prev = t
+    return total
+
+
+def test_canonical_order_same_time_resize_and_release():
+    """A pool resize and a container release landing at the same sim time:
+    the canonical trace order is emission order at that timestamp —
+    resize first (its simulator event was dispatched first), release
+    second — while ``Cluster.occupancy_events`` may merge/reorder. This
+    IS the defined order; a change here is a breaking change."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=2, deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=0.2, delta_s=1.0)
+    tr = Tracer()
+    cluster = Cluster(sim, cfg, tracer=tr)
+    done = []
+    # work 0.8 + checkpoint 0.2: the billed release lands exactly at t=1.0
+    cluster.submit("j1", priority=0.0, work_s=0.8,
+                   on_complete=done.append)
+    sim.schedule_at(1.0, lambda: cluster.resize(4))
+    sim.run()
+    assert done == [1.0]
+    names = [(e.t, e.name) for e in tr.canonical_events()]
+    assert names == [
+        (0.0, "task_submit"),
+        (0.0, "task_start"),
+        (1.0, "pool_resize"),   # dispatched first at t=1.0 ...
+        (1.0, "task_finish"),   # ... release second: (t, seq) order
+    ]
+    resize, finish = tr.canonical_events()[-2:]
+    assert resize.seq < finish.seq
+    assert tr.spans[0].t0 == 0.0 and tr.spans[0].t1 == 1.0
+    assert _integrate(tr.occupancy_deltas()) == pytest.approx(
+        _integrate(cluster.occupancy_events))
+
+
+def test_canonical_order_future_stamped_preemption_release():
+    """A §5.5 preemption bills its container until ``now +
+    checkpoint_s``: the span's release is future-stamped. The trace's
+    occupancy view orders it at its *effective* time, while the cluster's
+    raw ``occupancy_events`` appends it at emission and may go back in
+    time — both must integrate to identical busy container-seconds."""
+    sim = Simulator()
+    cfg = ClusterConfig(capacity=1, deploy_overhead_s=0.0, state_load_s=0.0,
+                        checkpoint_s=0.2, delta_s=1.0)
+    tr = Tracer()
+    cluster = Cluster(sim, cfg, tracer=tr)
+    done = []
+    cluster.submit("victim", priority=10.0, work_s=10.0,
+                   on_complete=done.append)
+    sim.schedule_at(2.0, lambda: cluster.submit(
+        "urgent", priority=0.0, work_s=1.0, on_complete=done.append))
+    sim.run()
+    assert cluster.n_preemptions == 1 and len(done) == 2
+    preempts = [e for e in tr.canonical_events() if e.name == "preempt"]
+    assert len(preempts) == 1
+    pe = preempts[0]
+    assert pe.t == 2.0
+    assert pe.args["release_t"] == pytest.approx(2.2)
+    assert pe.args["by_job"] == "urgent"
+    assert pe.args["remaining_work_s"] == pytest.approx(8.0)
+    # the victim's billed span is future-stamped past the preempt instant
+    victim_spans = [s for s in tr.spans if s.job_id == "victim"]
+    assert victim_spans[0].t0 == 0.0
+    assert victim_spans[0].t1 == pytest.approx(2.2)
+    # the preempt event precedes its own billed span in the seq stream
+    assert pe.seq < victim_spans[0].seq
+    # trace occupancy is time-sorted; the cluster's raw list is not
+    times = [t for t, _ in tr.occupancy_deltas()]
+    assert times == sorted(times)
+    raw_times = [t for t, _ in cluster.occupancy_events]
+    assert raw_times != sorted(raw_times)  # the documented disagreement
+    assert _integrate(tr.occupancy_deltas()) == pytest.approx(
+        _integrate(cluster.occupancy_events))
+    assert _integrate(tr.occupancy_deltas()) == pytest.approx(
+        sum(s.dur for s in tr.spans))
+    assert tr.reconcile(cluster) == []
+
+
+# --------------------------------------------------------------------------
+# reconciliation: the trace as billing-correctness oracle
+# --------------------------------------------------------------------------
+def test_tracing_leaves_goldens_bit_identical():
+    """The tentpole guarantee: enabling tracing must not move a single
+    float anywhere in the metrics."""
+    _, runner_off = _run_fleet(n_jobs=4, pattern="mixed")
+    _, runner_on = _run_fleet(n_jobs=4, pattern="mixed", tracer=Tracer())
+    off = {j: m.summary() for j, m in runner_off.metrics().items()}
+    on = {j: m.summary() for j, m in runner_on.metrics().items()}
+    assert off == on
+
+
+@pytest.mark.parametrize("strategy", ["jit", "eager_ao", "eager_serverless"])
+def test_reconcile_exact_across_billing_paths(strategy):
+    """All three billing paths — pooled task segments, always-on
+    containers, streaming releases — must reconcile EXACTLY (same floats,
+    same summation order), not just approximately."""
+    tr = Tracer()
+    platform, _ = _run_fleet(n_jobs=4, pattern="mixed", strategy=strategy,
+                             tracer=tr)
+    assert tr.reconcile(platform.cluster) == []
+    assert tr.container_seconds_by_job() == platform.cluster.container_seconds_by_job
+
+
+def test_reconcile_default_16_job_trace_exact():
+    """The acceptance cell: the golden 16-job mixed trace, traced, must
+    reconcile exactly and count every preemption."""
+    tr = Tracer()
+    platform, runner = _run_fleet(n_jobs=16, pattern="mixed", tracer=tr)
+    cluster = platform.cluster
+    assert tr.reconcile(cluster) == []
+    assert tr.container_seconds_by_job() == cluster.container_seconds_by_job
+    assert tr.preemptions_by_job() == cluster.n_preemptions_by_job
+    # and the per-job FleetMetrics billing is the same ledger
+    for job_id, m in runner.metrics().items():
+        assert m.container_seconds == pytest.approx(
+            tr.container_seconds_by_job().get(job_id, 0.0))
+
+
+def test_reconcile_catches_a_cooked_ledger():
+    """The oracle must actually bite: doctor the billed ledger after a
+    clean run and reconcile() has to report the job."""
+    tr = Tracer()
+    platform, _ = _run_fleet(n_jobs=2, pattern="steady", tracer=tr)
+    cluster = platform.cluster
+    assert tr.reconcile(cluster) == []
+    job_id = next(iter(cluster.container_seconds_by_job))
+    cluster.container_seconds_by_job[job_id] += 1.0
+    failures = tr.reconcile(cluster)
+    assert len(failures) == 1 and job_id in failures[0]
+
+
+def test_reconcile_vectorized_philox_path():
+    tr = Tracer()
+    platform, _ = _run_fleet(n_jobs=4, pattern="mixed", tracer=tr,
+                             rng="philox", vectorized=True)
+    assert tr.reconcile(platform.cluster) == []
+
+
+@pytest.mark.slow
+def test_reconcile_saturation_cell():
+    """The contended online saturation cell (preemptions across classes,
+    autoscaled pool) reconciles; serve_variant raises SystemExit itself
+    on any mismatch."""
+    from benchmarks.online import SATURATION, serve_variant
+
+    tr = Tracer()
+    row = serve_variant(SATURATION, "jit-classed", "jit", True, trace=tr)
+    assert row["silver_preemptions"] > 0  # genuinely contended
+    assert tr.snapshot()["counters"]["cluster.preempt"] == (
+        row["gold_preemptions"] + row["silver_preemptions"]
+        + row["best_effort_preemptions"])
+
+
+# --------------------------------------------------------------------------
+# scheduler / engine / online event streams
+# --------------------------------------------------------------------------
+def test_scheduler_round_and_calibration_events():
+    tr = Tracer()
+    platform, runner = _run_fleet(n_jobs=2, pattern="steady", tracer=tr)
+    counters = tr.snapshot()["counters"]
+    rounds = sum(m.rounds_done for m in runner.metrics().values())
+    assert counters["scheduler.round_open"] == rounds
+    assert counters["scheduler.round_close"] == rounds
+    assert counters["scheduler.drain_submit"] >= rounds
+    cal = [e for e in tr.events if e.cat == "calibration"]
+    assert cal and all(e.name == "t_pair" for e in cal)
+    for e in cal:
+        a = e.args
+        assert {"t_pair_before", "t_pair_after",
+                "t_agg_before", "t_agg_after"} <= set(a)
+        assert a["t_pair_after"] >= a["t_pair_before"]  # ratchet blend
+    opens = [e for e in tr.events if e.name == "round_open"]
+    assert {"round", "t_rnd", "t_agg", "deadline", "gated"} <= set(
+        opens[0].args)
+
+
+def test_online_admission_and_autoscale_events():
+    tr = Tracer()
+    trace = synthetic_fleet(4, "steady", seed=0)
+    platform = _platform(capacity=2, tracer=tr)
+    svc = platform.serve(
+        TraceStream(trace),
+        autoscaler=AutoscalerConfig(min_capacity=2, max_capacity=8))
+    svc.drain()
+    counters = tr.snapshot()["counters"]
+    admitted = sum(st.admitted for st in svc.stats.values())
+    assert counters["online.admit"] == admitted == 4
+    assert counters.get("online.scale_up", 0) == svc.n_scale_ups
+    assert counters.get("online.scale_down", 0) == svc.n_scale_downs
+    admits = [e for e in tr.events if e.name == "admit"]
+    assert {"cls", "queued", "queue_wait_s", "window_arrivals"} <= set(
+        admits[0].args)
+
+
+# --------------------------------------------------------------------------
+# the live dashboard
+# --------------------------------------------------------------------------
+def test_dashboard_mid_run_and_after_drain():
+    tr = Tracer()
+    trace = synthetic_fleet(4, "steady", seed=0)
+    platform = _platform(capacity=2, tracer=tr)
+    svc = platform.serve(
+        TraceStream(trace), window_s=120.0,
+        autoscaler=AutoscalerConfig(min_capacity=2, max_capacity=8))
+    svc.advance(until=200.0)
+    view = svc.dashboard(last_windows=2)
+    assert isinstance(view, DashboardView)
+    assert view.t == 200.0 and view.done is False
+    assert view.strategy == "jit"
+    assert view.pool["capacity"] == platform.cluster.capacity
+    assert 0.0 <= view.pool["occupancy"] <= 1.0
+    assert view.jobs["arrived"] >= view.jobs["active"] >= 0
+    assert view.backlog["weighted"] >= 0.0
+    assert set(view.classes) <= {"gold", "silver", "best_effort"}
+    assert len(view.windows) <= 2
+    assert view.metrics is not None
+    assert view.metrics["t"] == 200.0
+    assert view.metrics["counters"]["online.admit"] >= 1
+    d = view.as_dict()
+    assert d["t"] == 200.0 and d["pool"]["capacity"] == view.pool["capacity"]
+    json.dumps(d)  # the live view is wire-serialisable
+    svc.drain()
+    final = svc.dashboard()
+    assert final.done is True
+    assert final.jobs["active"] == 0
+    assert final.jobs["completed"] == final.jobs["arrived"] == 4
+    assert final.pool["peak"] >= final.pool["capacity"] or \
+        final.pool["peak"] >= 2
+
+
+def test_dashboard_without_tracer_has_no_metrics():
+    trace = synthetic_fleet(2, "steady", seed=0)
+    svc = _platform().serve(TraceStream(trace))
+    svc.drain()
+    view = svc.dashboard()
+    assert view.metrics is None and view.done is True
+
+
+# --------------------------------------------------------------------------
+# Perfetto / chrome-trace export (the --trace-out artifact)
+# --------------------------------------------------------------------------
+def test_export_chrome_structure_fleet(tmp_path):
+    tr = Tracer()
+    platform, _ = _run_fleet(n_jobs=8, pattern="dropout", tracer=tr,
+                             capacity=2, t_pair_s=2.0)
+    assert platform.cluster.n_preemptions > 0
+    path = tmp_path / "fleet_trace.json"
+    n = tr.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms" and len(evs) == n > 0
+    assert all({"ph", "pid", "tid", "name"} <= set(e) for e in evs)
+    assert {e["ph"] for e in evs} <= {"M", "X", "i", "C"}
+    meta = {e["args"]["name"] for e in evs
+            if e["ph"] == "M" and e["name"] == "process_name"}
+    assert meta == {"containers", "jobs", "control"}
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert xs and all(e["dur"] >= 0 and e["ts"] >= 0 for e in xs)
+    assert any(e["pid"] == 1 for e in xs)  # container tracks
+    # preemptions render as instants on the container track
+    pre = [e for e in evs if e["ph"] == "i" and e["name"] == "preempt"]
+    assert pre and all(e["s"] == "p" and e["pid"] == 1 for e in pre)
+
+
+@pytest.mark.slow
+def test_online_trace_out_artifact_golden(tmp_path):
+    """The ``benchmarks/online.py --trace-out`` artifact: re-runs the
+    burst jit-autoscaled cell traced (reconciliation enforced inside),
+    and the JSON must be structurally Perfetto-loadable."""
+    from benchmarks.online import export_trace_artifact
+
+    path = tmp_path / "online_trace.json"
+    n = export_trace_artifact(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert len(evs) == n > 0
+    assert doc["displayTimeUnit"] == "ms"
+    assert {e["ph"] for e in evs} <= {"M", "X", "i", "C"}
+    # pool resizes from the autoscaler: instant + a capacity counter track
+    resizes = [e for e in evs if e["name"] == "pool_resize"]
+    counters = [e for e in evs if e["ph"] == "C"]
+    assert resizes and counters
+    assert all(e["name"] == "pool_capacity" and
+               "capacity" in e["args"] for e in counters)
+    # job tracks carry named threads
+    tids = {e["args"]["name"] for e in evs
+            if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert tids  # at least one named job lane
+
+
+# --------------------------------------------------------------------------
+# conformance integration: excerpts on failed cells
+# --------------------------------------------------------------------------
+def test_conformance_cell_reconciles_and_excerpts_on_failure():
+    from repro.fleet.conformance import CellSpec, run_cell
+
+    spec = CellSpec(pattern="steady", n_jobs=2, min_savings_pct=None)
+    rep = run_cell(spec, strategies=("jit", "eager_ao"))
+    assert rep.passed and rep.trace_excerpts == {}
+    assert all(r.tracer is not None for r in rep.runs.values())
+    # an impossible claim fails the cell and attaches per-job excerpts
+    bad = CellSpec(pattern="steady", n_jobs=2, min_savings_pct=None,
+                   p50_band_s=-1e9)
+    rep = run_cell(bad, strategies=("jit", "eager_ao"))
+    assert not rep.passed
+    assert set(rep.trace_excerpts) == {"jit", "eager_ao"}
+    jit_tail = rep.trace_excerpts["jit"]
+    assert jit_tail and all(
+        len(evs) <= 20 and {"t", "cat", "name"} <= set(evs[0])
+        for evs in jit_tail.values())

@@ -75,7 +75,7 @@ HEADER = ("strategy,n_jobs,pattern,capacity,horizon_rounds,rounds,"
 def simulate(n_jobs: int, pattern: str, strategy: str, *, seed: int = 0,
              capacity: Optional[int] = None,
              horizon_rounds: Optional[int] = None,
-             t_pair_s: float = 0.05, tracer=None) -> Dict:
+             t_pair_s: float = 0.05, cost_table=None, tracer=None) -> Dict:
     trace = synthetic_fleet(n_jobs, pattern, seed=seed,
                             cluster_capacity=capacity,
                             horizon_rounds=horizon_rounds)
@@ -83,6 +83,7 @@ def simulate(n_jobs: int, pattern: str, strategy: str, *, seed: int = 0,
     platform = Platform(
         ClusterConfig(capacity=capacity),
         AggregationEstimator(t_pair_s=t_pair_s),
+        cost_table=cost_table,
         tracer=tracer,
     )
     runner = platform.submit_fleet(trace, strategy=strategy)
@@ -134,15 +135,22 @@ def grid_cells(smoke: bool = False, full: bool = False
     return grid
 
 
-def run(smoke: bool = False, full: bool = False) -> List[Dict]:
-    """The sweep grid; --smoke keeps the CI cells (see ``grid_cells``)."""
+def run(smoke: bool = False, full: bool = False,
+        cost_table=None) -> List[Dict]:
+    """The sweep grid; --smoke keeps the CI cells (see ``grid_cells``).
+
+    ``cost_table``: a measured `repro.kernels.autotune.KernelCostTable`;
+    when given, every strategy prices fuse work from autotuned kernel
+    timings instead of the tier t_pair constants (the default-constants
+    rows are the golden-locked ones)."""
     rows: List[Dict] = []
     for n_jobs, pattern, capacity, horizon in grid_cells(smoke, full):
         t_pair = (STRESS_T_PAIR_S if capacity == TINY_CAPACITY
                   else TIER_T_PAIR_S["default"])
         cell = {
             s: simulate(n_jobs, pattern, s, capacity=capacity,
-                        horizon_rounds=horizon, t_pair_s=t_pair)
+                        horizon_rounds=horizon, t_pair_s=t_pair,
+                        cost_table=cost_table)
             for s in STRATEGIES
         }
         ao_cs = cell["eager_ao"]["container_seconds"]
@@ -180,9 +188,18 @@ def main() -> None:
     ap.add_argument("--trace-out", default="",
                     help="re-run the golden 16-job mixed jit cell traced "
                          "and write a Perfetto-loadable chrome trace here")
+    ap.add_argument("--cost-table", default="",
+                    help="KernelCostTable JSON (kernel_bench "
+                         "--emit-cost-table): price fuse work from measured "
+                         "kernel timings instead of t_pair constants")
     args = ap.parse_args()
+    cost_table = None
+    if args.cost_table:
+        from repro.kernels.autotune import KernelCostTable
+
+        cost_table = KernelCostTable.load(args.cost_table)
     print(HEADER)
-    rows = run(smoke=args.smoke, full=args.full)
+    rows = run(smoke=args.smoke, full=args.full, cost_table=cost_table)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"bench": "fleet", "smoke": args.smoke, "rows": rows},

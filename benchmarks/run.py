@@ -23,10 +23,11 @@ def main() -> None:
     t0 = time.time()
 
     if only in (None, "kernels"):
-        _section("kernel microbenchmarks (name,us_per_call,derived)")
+        _section("kernel microbenchmarks (autotuned vs default tiles)")
         from benchmarks import kernel_bench
 
-        kernel_bench.main()
+        # run(), not main(): main()'s argparse would reject our own flags
+        kernel_bench.run()
 
     if only in (None, "periodicity"):
         _section("Fig 3/4: periodicity + linearity (real JAX training)")

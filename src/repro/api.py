@@ -82,6 +82,7 @@ class Platform:
         estimator: Optional[AggregationEstimator] = None,
         *,
         t_pair_s: float = 0.05,
+        cost_table=None,
         tracer=None,
     ):
         self.sim = Simulator()
@@ -92,7 +93,14 @@ class Platform:
         self.cluster = Cluster(self.sim, self.cluster_config, tracer=tracer)
         self.tracer = self.cluster.tracer
         self._estimator_explicit = estimator is not None
-        self.estimator = estimator or AggregationEstimator(t_pair_s)
+        # cost_table: a measured `repro.kernels.autotune.KernelCostTable`;
+        # when supplied, every vehicle prices t_pair/t_agg from autotuned
+        # kernel timings per model size instead of the t_pair_s constant
+        self.estimator = estimator or AggregationEstimator(
+            t_pair_s, cost_table=cost_table)
+        if cost_table is not None and estimator is not None:
+            self.estimator = dataclasses.replace(
+                estimator, cost_table=cost_table)
         self.engines: Dict[str, RoundEngine] = {}
         self._scheduler: Optional[JITScheduler] = None
         self._fleets: List[Any] = []  # List[repro.fleet.FleetRunner]
@@ -480,12 +488,14 @@ def run_job(
     cluster_config: Optional[ClusterConfig] = None,
     estimator: Optional[AggregationEstimator] = None,
     t_pair_s: float = 0.05,
+    cost_table=None,
     seed: int = 0,
     noise_rel: float = 0.02,
     dropout_prob: float = 0.0,
 ) -> JobMetrics:
     """One-shot: simulate `job` under `policy` on a fresh platform."""
-    platform = Platform(cluster_config, estimator, t_pair_s=t_pair_s)
+    platform = Platform(cluster_config, estimator, t_pair_s=t_pair_s,
+                        cost_table=cost_table)
     platform.submit(job, policy, seed=seed, noise_rel=noise_rel,
                     dropout_prob=dropout_prob)
     return platform.run()[job.job_id]

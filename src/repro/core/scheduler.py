@@ -250,7 +250,7 @@ class JITScheduler:
         from repro.core.estimator import usable_cores
 
         res = self.est.resources
-        return self.est.t_pair_s / (
+        return self.est.t_pair_for(st.job.model_bytes) / (
             usable_cores(res, st.job.model_bytes) * res.n_aggregators
         )
 
@@ -277,15 +277,17 @@ class JITScheduler:
         if not tr.enabled:
             self.est.calibrate(observed_t_agg, st.job, n_updates)
             return
-        t_pair_before = self.est.t_pair_s
+        t_pair_before = self.est.t_pair_for(st.job.model_bytes)
         t_agg_before = self.est.t_agg(st.job)
         self.est.calibrate(observed_t_agg, st.job, n_updates)
         tr.event(t, "calibration", "t_pair", st.job.job_id,
                  round=st.round_idx, observed_t_agg_s=observed_t_agg,
                  n_updates=n_updates, t_pair_before=t_pair_before,
-                 t_pair_after=self.est.t_pair_s,
+                 t_pair_after=self.est.t_pair_for(st.job.model_bytes),
                  t_agg_before=t_agg_before,
-                 t_agg_after=self.est.t_agg(st.job))
+                 t_agg_after=self.est.t_agg(st.job),
+                 source=("cost_table" if self.est.cost_table is not None
+                         else "constant"))
 
     def _round_complete(self, st: JobState, t: float) -> None:
         tr = self.tracer

@@ -313,11 +313,12 @@ class RoundEngine:
         reflected. Simulation default: t_pair scaled by usable cores x
         aggregator count (paper §5.4); the real runtime's streaming
         aggregator is a single worker, so w_u = raw t_pair."""
+        t_pair = self.est.t_pair_for(self.job.model_bytes)
         if self.single_worker_fuse:
-            self.w_u = self.est.t_pair_s
+            self.w_u = t_pair
         else:
             res = self.est.resources
-            self.w_u = self.est.t_pair_s / (
+            self.w_u = t_pair / (
                 usable_cores(res, self.job.model_bytes) * res.n_aggregators
             )
 
@@ -908,7 +909,7 @@ class JIT(AggregationStrategy):
                 e.est.calibrate(done - max(self._trigger_abs, last),
                                 e.job, max(e.processed, 1))
             else:
-                before = e.est.t_pair_s
+                before = e.est.t_pair_for(e.job.model_bytes)
                 e.est.calibrate(done - max(self._trigger_abs, last),
                                 e.job, max(e.processed, 1))
                 tr.event(done, "calibration", "t_pair", e.job.job_id,
@@ -917,8 +918,10 @@ class JIT(AggregationStrategy):
                                                      last),
                          n_updates=max(e.processed, 1),
                          t_pair_before=before,
-                         t_pair_after=e.est.t_pair_s,
-                         t_agg_after=e.est.t_agg(e.job))
+                         t_pair_after=e.est.t_pair_for(e.job.model_bytes),
+                         t_agg_after=e.est.t_agg(e.job),
+                         source=("cost_table" if e.est.cost_table is not None
+                                 else "constant"))
         return done
 
 

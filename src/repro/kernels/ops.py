@@ -25,15 +25,28 @@ def _leaves(tree: Pytree):
     return jax.tree.leaves(tree)
 
 
+def _tile_kwargs(bn: Optional[int], kb: Optional[int] = None) -> dict:
+    """Autotuned tile overrides (None -> the kernel's built-in default)."""
+    kw = {}
+    if bn is not None:
+        kw["bn"] = bn
+    if kb is not None:
+        kw["kb"] = kb
+    return kw
+
+
 def fuse_updates(
     updates: Sequence[Pytree],
     weights: Optional[Sequence[float]] = None,
     *,
     interpret: bool = True,
+    bn: Optional[int] = None,
+    kb: Optional[int] = None,
 ) -> Pytree:
     """Weighted fusion of K model updates (FedAvg-style weighted mean when
     weights sum to 1). Leaf-wise: stacks each leaf across updates and runs
-    the fused_agg kernel once per leaf."""
+    the fused_agg kernel once per leaf. ``bn``/``kb`` override the tile
+    shape (see `repro.kernels.autotune.autotune` for the tuned choice)."""
     k = len(updates)
     assert k >= 1
     if weights is None:
@@ -44,7 +57,8 @@ def fuse_updates(
     fused = []
     for i in range(len(leaves[0])):
         stack = jnp.stack([l[i].reshape(-1) for l in leaves])  # (K, N)
-        out = fused_agg(stack, w, interpret=interpret)
+        out = fused_agg(stack, w, interpret=interpret,
+                        **_tile_kwargs(bn, kb))
         fused.append(out.reshape(leaves[0][i].shape).astype(leaves[0][i].dtype))
     return jax.tree.unflatten(treedef, fused)
 
@@ -55,6 +69,7 @@ def accumulate(
     weight: float,
     *,
     interpret: bool = True,
+    bn: Optional[int] = None,
 ) -> Pytree:
     """Streaming (incremental) fusion: acc <- acc + weight*update.
 
@@ -69,6 +84,7 @@ def accumulate(
         lambda a, u: pair_fuse(
             a.reshape(-1), u.astype(jnp.float32).reshape(-1),
             op="wsum", wa=1.0, wb=float(weight), interpret=interpret,
+            **_tile_kwargs(bn),
         ).reshape(a.shape),
         acc,
         update,
@@ -81,6 +97,8 @@ def fuse_quantized(
     weights: Optional[Sequence[float]] = None,
     *,
     interpret: bool = True,
+    bn: Optional[int] = None,
+    kb: Optional[int] = None,
 ) -> Pytree:
     """Fuse int8-quantised updates (beyond-paper comm compression).
 
@@ -98,7 +116,8 @@ def fuse_quantized(
         sc = jnp.asarray(
             [float(ss[j][i]) * weights[j] for j in range(k)], jnp.float32
         )
-        out = quant_agg(stack, sc, interpret=interpret)
+        out = quant_agg(stack, sc, interpret=interpret,
+                        **_tile_kwargs(bn, kb))
         fused.append(out.reshape(qs[0][i].shape))
     return jax.tree.unflatten(treedef, fused)
 

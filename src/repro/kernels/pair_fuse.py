@@ -5,6 +5,11 @@
 used by incremental (streaming / eager) aggregation, where updates are fused
 one pair at a time as they arrive. f is selected statically: mean, weighted
 sum, max, min. Elementwise and bandwidth-bound; (8, 1024) fp32 tiles.
+
+The block size ``bn`` is tunable (multiple of 1024 = 8*128 fp32 lanes);
+`repro.kernels.autotune` picks it per model size by minimising modeled HBM
+traffic (padding waste vs VMEM pressure). The default matches the
+pre-autotune constant.
 """
 from __future__ import annotations
 
@@ -14,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BN = 8 * 1024
+DEFAULT_BN = 8 * 1024
+BN = DEFAULT_BN  # backwards-compatible alias
 
 
 def _make_kernel(op: str):
@@ -36,7 +42,7 @@ def _make_kernel(op: str):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+@functools.partial(jax.jit, static_argnames=("op", "bn", "interpret"))
 def pair_fuse(
     a: jax.Array,  # (N,)
     b: jax.Array,  # (N,)
@@ -44,10 +50,11 @@ def pair_fuse(
     op: str = "mean",
     wa: float = 0.5,
     wb: float = 0.5,
+    bn: int = DEFAULT_BN,
     interpret: bool = True,
 ) -> jax.Array:
     (n,) = a.shape
-    np_ = -(-n // BN) * BN
+    np_ = -(-n // bn) * bn
     if np_ != n:
         a = jnp.pad(a, (0, np_ - n))
         b = jnp.pad(b, (0, np_ - n))
@@ -55,14 +62,14 @@ def pair_fuse(
     wb_arr = jnp.full((1,), wb, jnp.float32)
     out = pl.pallas_call(
         _make_kernel(op),
-        grid=(np_ // BN,),
+        grid=(np_ // bn,),
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((1,), lambda i: (0,)),
-            pl.BlockSpec((BN,), lambda i: (i,)),
-            pl.BlockSpec((BN,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
         ],
-        out_specs=pl.BlockSpec((BN,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((np_,), a.dtype),
         interpret=interpret,
     )(wa_arr, wb_arr, a, b)

@@ -24,6 +24,14 @@ BF16 = 2
 F32 = 4
 
 
+def bandwidth_time_s(bytes_moved: float, hw: HardwareSpec = V5E) -> float:
+    """Bandwidth-roofline execution time for a memory-bound kernel: the
+    HBM bytes it moves divided by the chip's HBM bandwidth. Shared by the
+    kernel autotuner (`repro.kernels.autotune`) and kernel_bench — both
+    score Pallas aggregation kernels, which never leave the memory roof."""
+    return bytes_moved / hw.hbm_bw
+
+
 def _avg_causal_ctx(seq: int, window: Optional[int]) -> float:
     """Average attended context length per query position."""
     if window is None or window >= seq:

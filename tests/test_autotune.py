@@ -1,0 +1,320 @@
+"""`repro.kernels.autotune` — the tile-size search, the corrected HBM
+bytes model it scores with, and the `KernelCostTable` artifact that closes
+the sim-to-real loop (ISSUE 10).
+
+Fast tier: closed-form model checks (hand-computed bytes incl. the output
+read-modify-write the old kernel_bench derivation missed), candidate
+legality, tuner determinism/optimality, cost-table interpolation and JSON
+round-trip, estimator/Platform integration, and the kernel_bench --check
+guard logic on synthetic rows plus the committed-baseline golden lock on
+the deterministic model columns. Slow tier: the real interpret-mode
+measured speedups vs the committed baseline ratios.
+"""
+import json
+import pathlib
+
+import pytest
+
+from benchmarks import kernel_bench
+from repro.core.estimator import AggregationEstimator, AggregatorResources
+from repro.core.jobspec import FLJobSpec, PartySpec
+from repro.kernels import autotune as at
+from repro.kernels.autotune import (
+    KERNELS,
+    LANE_BLOCK,
+    VMEM_BUDGET_BYTES,
+    CostEntry,
+    KernelCostTable,
+    build_cost_table,
+    candidates,
+    kernel_bytes_moved,
+    modeled_time_s,
+    vmem_working_set,
+)
+
+
+def _job(n=10, model_bytes=1 << 20):
+    return FLJobSpec(
+        job_id="j", model_arch="m", model_bytes=model_bytes,
+        parties={f"p{i}": PartySpec(f"p{i}", epoch_time_s=1.0)
+                 for i in range(n)},
+    )
+
+
+# ---- corrected bytes derivation --------------------------------------------
+def test_fused_agg_bytes_hand_computed_single_slab():
+    # k=8, n=2048, tile (2048, 8): one grid step, no padding, no revisit
+    got = kernel_bytes_moved("fused_agg", 8, 2048, bn=2048, kb=8)
+    want = 8 * 2048 * 4 + 8 * 4 + 2048 * 4  # inputs + weights + out written
+    assert got == want
+
+
+def test_fused_agg_bytes_counts_output_rmw_per_k_slab():
+    # k=32 at kb=8 -> 4 K-slabs: output tile written once, then read+written
+    # on each of the 3 revisits (2*gk - 1 = 7 output sweeps)
+    n, bn = 4096, 2048
+    got = kernel_bytes_moved("fused_agg", 32, n, bn=bn, kb=8)
+    want = 32 * n * 4 + 32 * 4 + n * 4 * 7
+    assert got == want
+    # kb >= k collapses to one slab: exactly one output sweep
+    one_slab = kernel_bytes_moved("fused_agg", 32, n, bn=bn, kb=32)
+    assert one_slab == 32 * n * 4 + 32 * 4 + n * 4
+
+
+def test_bytes_counts_padding_tiles():
+    # n=1500 at bn=1024 pads to 2048: dead bytes are streamed too
+    padded = kernel_bytes_moved("fused_agg", 8, 1500, bn=1024, kb=8)
+    exact = kernel_bytes_moved("fused_agg", 8, 2048, bn=1024, kb=8)
+    assert padded == exact
+
+
+def test_pair_fuse_bytes_no_rmw():
+    n, bn = 4096, 2048
+    got = kernel_bytes_moved("pair_fuse", 2, n, bn=bn, kb=2)
+    assert got == 2 * n * 4 + 2 * 4 + n * 4  # a + b + scalars + one write
+
+
+def test_quant_agg_bytes_int8_inputs_fp32_accumulator():
+    # int8 inputs (1 B) but the revisited accumulator is fp32 (4 B)
+    n = 2048
+    got = kernel_bytes_moved("quant_agg", 64, n, bn=n, kb=32)  # gk = 2
+    assert got == 64 * n * 1 + 64 * 4 + n * 4 * 3
+
+
+def test_old_kernel_bench_derivation_undercounted():
+    """The pre-PR-10 model was bytes = (k*n + n)*4 — no RMW, no padding."""
+    k, n = 32, 1 << 20
+    spec = KERNELS["fused_agg"]
+    old = (k * n + n) * 4
+    new = kernel_bytes_moved("fused_agg", k, n,
+                             bn=spec.default_bn, kb=spec.default_kb)
+    assert new > old  # 4 K-slabs at the default tile -> 7 output sweeps
+
+
+# ---- candidate legality and the search -------------------------------------
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_candidates_legal(kernel):
+    spec = KERNELS[kernel]
+    cands = candidates(kernel, 32, 1 << 20)
+    assert cands
+    for bn, kb in cands:
+        assert bn % LANE_BLOCK == 0
+        assert kb % spec.kb_align == 0 or spec.kb_align == 1
+        assert vmem_working_set(kernel, bn=bn, kb=kb) <= VMEM_BUDGET_BYTES
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+@pytest.mark.parametrize("k,n", [(1, 1), (2, 1000), (8, 1 << 14),
+                                 (64, 1 << 20), (256, 1 << 22)])
+def test_autotune_never_worse_than_default(kernel, k, n):
+    spec = KERNELS[kernel]
+    choice = at.autotune(kernel, k, n)
+    default = modeled_time_s(kernel, k, n, bn=spec.default_bn,
+                             kb=spec.default_kb)
+    assert choice.modeled_s <= default + 1e-15
+    assert (choice.bn, choice.kb) in candidates(kernel, k, n)
+
+
+def test_autotune_kills_output_rmw_when_k_fits_one_slab():
+    # k=32 fits a legal kb=32 slab: the tuner should never pay revisit
+    # traffic it can avoid
+    choice = at.autotune("fused_agg", 32, 1 << 20)
+    assert choice.kb >= 32
+    kp = -(-32 // choice.kb) * choice.kb
+    assert kp // choice.kb == 1  # single K slab -> no RMW
+
+
+def test_autotune_deterministic():
+    a = at.autotune("quant_agg", 48, 3_000_000)
+    b = at.autotune("quant_agg", 48, 3_000_000)
+    assert a == b
+
+
+def test_autotune_avoids_padding_waste_on_small_models():
+    # a 64 KiB model (16k fp32) must not be tiled at bn=32768 (half padding)
+    choice = at.autotune("pair_fuse", 2, 16_384)
+    assert choice.bn <= 16_384
+
+
+# ---- KernelCostTable -------------------------------------------------------
+def _table():
+    return KernelCostTable(entries=[
+        CostEntry("pair_fuse", 1 << 20, 1e-4, 8192, 2, "roofline"),
+        CostEntry("pair_fuse", 4 << 20, 4e-4, 32768, 2, "roofline"),
+        CostEntry("fused_agg", 1 << 20, 5e-5, 32768, 8, "roofline"),
+    ])
+
+
+def test_cost_table_interpolates_linearly():
+    t = _table()
+    assert t.t_pair(1 << 20) == pytest.approx(1e-4)
+    assert t.t_pair(4 << 20) == pytest.approx(4e-4)
+    mid = (1 << 20) + ((4 << 20) - (1 << 20)) / 2
+    assert t.t_pair(int(mid)) == pytest.approx(2.5e-4)
+
+
+def test_cost_table_scales_proportionally_beyond_ends():
+    t = _table()
+    # bandwidth-bound => linear in bytes below/above the table range
+    assert t.t_pair(1 << 19) == pytest.approx(0.5e-4)
+    assert t.t_pair(8 << 20) == pytest.approx(8e-4)
+
+
+def test_cost_table_unknown_kernel_raises():
+    with pytest.raises(KeyError):
+        _table().t_pair(1 << 20, kernel="nope")
+
+
+def test_cost_table_tile_nearest():
+    assert _table().tile(5 << 20) == (32768, 2)
+    assert _table().tile(1) == (8192, 2)
+
+
+def test_cost_table_json_round_trip(tmp_path):
+    t = _table()
+    path = tmp_path / "table.json"
+    t.dump(str(path))
+    back = KernelCostTable.load(str(path))
+    assert back == t
+    # byte-stable re-dump (the artifact is diffable across runs)
+    path2 = tmp_path / "table2.json"
+    back.dump(str(path2))
+    assert path.read_text() == path2.read_text()
+
+
+def test_build_cost_table_roofline_basis():
+    sizes = [1 << 20, 4 << 20, 16 << 20]
+    table = build_cost_table(sizes)
+    assert {e.kernel for e in table.entries} == set(KERNELS)
+    for kernel in KERNELS:
+        rows = [e for e in table.entries if e.kernel == kernel]
+        assert [e.model_bytes for e in rows] == sizes
+        assert all(e.basis == "roofline" for e in rows)
+        assert all(e.t_pair_s > 0 for e in rows)
+        # fusion is bandwidth-bound: bigger model, bigger t_pair
+        t_pairs = [e.t_pair_s for e in rows]
+        assert t_pairs == sorted(t_pairs)
+        # the recorded tile is the tuner's choice for that size
+        for e in rows:
+            spec = KERNELS[kernel]
+            n = max(e.model_bytes // spec.in_itemsize, 1)
+            k = 2 if kernel == "pair_fuse" else spec.default_kb
+            choice = at.autotune(kernel, k, n)
+            assert (e.bn, e.kb) == (choice.bn, choice.kb)
+
+
+# ---- estimator / Platform integration --------------------------------------
+def test_estimator_sources_t_pair_from_table():
+    table = _table()
+    est = AggregationEstimator(0.05, cost_table=table)
+    assert est.t_pair_for(1 << 20) == pytest.approx(1e-4)
+    assert est.t_pair_for(4 << 20) == pytest.approx(4e-4)
+    # no table: the historical constant, size-blind
+    plain = AggregationEstimator(0.05)
+    assert plain.t_pair_for(1 << 20) == 0.05
+    assert plain.t_pair_for(1 << 30) == 0.05
+
+
+def test_estimator_t_agg_uses_table_t_pair():
+    table = _table()
+    res = AggregatorResources(n_aggregators=2, cores_per_aggregator=4,
+                              intra_dc_bw=1e9)
+    est = AggregationEstimator(0.05, resources=res, cost_table=table)
+    job = _job(n=80, model_bytes=1 << 20)
+    want = (80 * 1e-4) / (4 * 2) + (1 << 20) / 1e9
+    assert est.t_agg(job) == pytest.approx(want)
+
+
+def test_platform_accepts_cost_table():
+    from repro.api import Platform
+
+    table = _table()
+    p = Platform(cost_table=table)
+    assert p.estimator.cost_table is table
+    # an explicit estimator gets the table grafted on (fresh calibration)
+    est = AggregationEstimator(0.07)
+    p2 = Platform(None, est, cost_table=table)
+    assert p2.estimator.cost_table is table
+    assert p2.estimator.t_pair_s == 0.07
+    assert est.cost_table is None  # caller's estimator untouched
+
+
+def test_run_job_with_cost_table_completes():
+    """End-to-end: a simulated job priced from measured kernel timings."""
+    from repro.api import run_job
+
+    table = build_cost_table([1 << 20, 16 << 20])
+    m = run_job(_job(n=6, model_bytes=4 << 20), "jit", cost_table=table,
+                seed=3)
+    assert m.rounds_done > 0
+    assert m.container_seconds > 0
+
+
+# ---- kernel_bench golden lock + ratio guard --------------------------------
+def _baseline():
+    path = (pathlib.Path(kernel_bench.__file__).parent
+            / "kernel_baseline.json")
+    return json.loads(path.read_text())
+
+
+@pytest.fixture(scope="module")
+def model_rows():
+    return kernel_bench.model_rows()  # closed-form, free
+
+
+def test_model_rows_match_committed_baseline(model_rows):
+    """Golden lock: tile choices, corrected bytes, grid steps and modeled
+    speedups must reproduce ``benchmarks/kernel_baseline.json`` exactly —
+    a diff means the tuner or the bytes model changed behaviour."""
+    base = {(r["kernel"], r["k"], r["n"]): r
+            for r in _baseline()["model_rows"]}
+    assert len(base) == len(model_rows)
+    for r in model_rows:
+        b = base[(r["kernel"], r["k"], r["n"])]
+        for col in kernel_bench.DETERMINISTIC_COLS:
+            assert r[col] == b[col], (r["kernel"], r["k"], r["n"], col)
+
+
+def test_check_against_passes_on_baseline_speedups(model_rows):
+    base = _baseline()
+    kernel_bench.check_against(
+        str(pathlib.Path(kernel_bench.__file__).parent
+            / "kernel_baseline.json"),
+        model_rows, dict(base["speedups"]))  # must not raise
+
+
+def test_check_against_fails_on_determinism_drift(tmp_path, model_rows):
+    base = _baseline()
+    drifted = [dict(r) for r in model_rows]
+    drifted[0]["tuned_bn"] *= 2
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps(base))
+    with pytest.raises(SystemExit):
+        kernel_bench.check_against(str(path), drifted, base["speedups"])
+
+
+def test_check_against_fails_on_speedup_regression(tmp_path, model_rows):
+    base = _baseline()
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps(base))
+    # a >30% drop vs the committed ratio trips the guard
+    low = {k: v * kernel_bench.CHECK_SPEEDUP_FRACTION * 0.99
+           for k, v in base["speedups"].items()}
+    with pytest.raises(SystemExit):
+        kernel_bench.check_against(str(path), model_rows, low)
+    # tolerated drift (well within 30%) passes
+    mild = {k: v * 0.9 for k, v in base["speedups"].items()}
+    kernel_bench.check_against(str(path), model_rows, mild)
+
+
+@pytest.mark.slow
+def test_measured_interpret_speedups_hold_vs_baseline():
+    """The real ratio guard: interpret-mode wall-clock of tuned vs default
+    tiles — time tracks grid steps there, so the ratio is hardware-portable
+    even though absolute numbers are meaningless for TPU."""
+    measured = kernel_bench.measured_rows()
+    sp = kernel_bench.speedups(measured)
+    base = _baseline()["speedups"]
+    assert set(sp) == set(base)
+    for name, got in sp.items():
+        assert got >= kernel_bench.CHECK_SPEEDUP_FRACTION * base[name], name

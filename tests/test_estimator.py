@@ -43,6 +43,20 @@ def test_usable_cores_gpu_memory_bound():
     assert usable_cores(res2, model_bytes=int(2e9)) == 2  # CPU: plain cores
 
 
+def test_usable_cores_exact_fit_clamps_to_serial_floor():
+    """memory == model_bytes: one slot goes to the accumulator, leaving
+    fit == 0 updates resident — clamped to the serial floor of 1 core,
+    never 0 (a zero C_agg would make t_agg infinite)."""
+    res = AggregatorResources(cores_per_aggregator=8,
+                              accelerator_mem_bytes=2e9)
+    assert usable_cores(res, model_bytes=int(2e9)) == 1  # fit = 1 - 1 = 0
+    # model larger than memory: still the serial floor
+    assert usable_cores(res, model_bytes=int(4e9)) == 1
+    # just under half: 2 fit, minus the accumulator slot -> 1
+    assert usable_cores(res, model_bytes=int(1e9)) == 1
+    assert usable_cores(res, model_bytes=int(0.5e9)) == 3
+
+
 def test_measure_t_pair_runs_real_fusion():
     calls = []
 
@@ -55,6 +69,27 @@ def test_measure_t_pair_runs_real_fusion():
     assert len(calls) == 4  # warmup + 3 trials
 
 
+def test_measure_t_pair_blocks_warmup_and_clamps_trials():
+    """ISSUE 10: JAX dispatch is async — an unblocked warmup's device work
+    would bleed into (and inflate) trial 0, and this number feeds the
+    simulator. The warmup must block before the first clock starts, and
+    trials clamp to >= 3 so one scheduling blip cannot skew the median."""
+    log = []
+
+    class Out:
+        def block_until_ready(self):
+            log.append("block")
+
+    def fuse(a, b):
+        log.append("call")
+        return Out()
+
+    measure_t_pair(fuse, model_bytes=4 * 100, trials=1)
+    # trials=1 clamps to 3: warmup + 3 timed calls, every one blocked,
+    # and the warmup is fully drained before the first timed call
+    assert log == ["call", "block"] * 4
+
+
 def test_calibration_only_grows_conservatively():
     est = AggregationEstimator(0.1)
     job = _job(n=10)
@@ -63,3 +98,111 @@ def test_calibration_only_grows_conservatively():
     before = est.t_pair_s
     est.calibrate(observed_t_agg=0.0001, job=job, n_updates=10)
     assert est.t_pair_s >= before * 0.49  # never collapses on one fast round
+
+
+# ---- asymmetric calibration: fast up, patience-gated decay down (ISSUE 10)
+def _observed_for(est, job, t_pair, n_updates=10):
+    """The observed_t_agg that implies exactly ``t_pair`` for this job."""
+    from repro.core.estimator import usable_cores as _uc
+
+    res = est.resources
+    c = _uc(res, job.model_bytes)
+    comm = job.model_bytes / res.intra_dc_bw
+    return t_pair * n_updates / (c * res.n_aggregators) + comm
+
+
+def test_calibration_recovers_from_inflated_outlier():
+    """THE ratchet regression (PR 5 / ISSUE 10): one outlier observation
+    (queued drain, GC pause) must not inflate t_pair forever. The old
+    ``max(new, current)`` blend could never re-fit downward; the asymmetric
+    blend decays after a sustained low run and lands exactly on the level
+    the run itself implied."""
+    est = AggregationEstimator(0.1)
+    job = _job(n=10)
+    # a single 10x outlier ratchets the estimate up immediately
+    est.calibrate(_observed_for(est, job, 1.0), job, n_updates=10)
+    inflated = est.t_pair_s
+    assert inflated > 0.5
+    # steady-state observations all imply the true t_pair of 0.1
+    for _ in range(est.decay_patience + 10):
+        est.calibrate(_observed_for(est, job, 0.1), job, n_updates=10)
+    assert est.t_pair_s == pytest.approx(0.1, rel=1e-6)  # fully recovered
+    # ...and the floor held: never undershot what the run implied
+    assert est.t_pair_s >= 0.1 - 1e-12
+
+
+def test_calibration_single_low_observation_does_not_decay():
+    """Gated-round observations systematically under-measure (tail drains
+    cover only part of the fused updates): one low sample is treated as a
+    measurement artifact, not a re-fit signal."""
+    est = AggregationEstimator(0.2)
+    job = _job(n=10)
+    for _ in range(est.decay_patience - 1):
+        est.calibrate(_observed_for(est, job, 0.01), job, n_updates=10)
+        assert est.t_pair_s == 0.2  # patience not yet exhausted
+
+
+def test_calibration_up_move_resets_decay_patience():
+    est = AggregationEstimator(0.2)
+    job = _job(n=10)
+    for _ in range(est.decay_patience - 1):
+        est.calibrate(_observed_for(est, job, 0.01), job, n_updates=10)
+    # an up-move resets the low streak...
+    est.calibrate(_observed_for(est, job, 0.25), job, n_updates=10)
+    assert est.t_pair_s == pytest.approx(0.5 * (0.2 + 0.25))
+    # ...so the next low observation starts a fresh patience window
+    before = est.t_pair_s
+    est.calibrate(_observed_for(est, job, 0.01), job, n_updates=10)
+    assert est.t_pair_s == before
+
+
+def test_calibration_decay_is_bounded_per_observation():
+    """Down moves shrink by at most decay_rate per observation — no
+    collapse to the low level in one step (late aggregation hurts SLA)."""
+    est = AggregationEstimator(1.0)
+    job = _job(n=10)
+    for _ in range(est.decay_patience):
+        est.calibrate(_observed_for(est, job, 1e-4), job, n_updates=10)
+    assert est.t_pair_s == pytest.approx(1.0 * est.decay_rate)
+
+
+def test_calibration_up_still_moves_halfway_immediately():
+    """The SLA-protective half of the asymmetry is unchanged: a slow
+    observation moves the estimate halfway up at once."""
+    est = AggregationEstimator(0.1)
+    job = _job(n=10)
+    est.calibrate(_observed_for(est, job, 0.3), job, n_updates=10)
+    assert est.t_pair_s == pytest.approx(0.5 * (0.1 + 0.3))
+
+
+def test_calibration_with_cost_table_scales_not_mutates():
+    """With a measured cost table, calibration adjusts the dimensionless
+    calib_scale — one job's congestion never corrupts the hardware
+    measurement itself."""
+    from repro.kernels.autotune import CostEntry, KernelCostTable
+
+    table = KernelCostTable(entries=[
+        CostEntry("pair_fuse", 1 << 20, 0.01, 8192, 2, "roofline")])
+    est = AggregationEstimator(0.1, cost_table=table)
+    job = _job(n=10, model_bytes=1 << 20)
+    assert est.t_pair_for(1 << 20) == pytest.approx(0.01)
+    # observation implies 2x the measured curve -> scale blends to 1.5
+    est.calibrate(_observed_for(est, job, 0.02), job, n_updates=10)
+    assert est.calib_scale == pytest.approx(1.5)
+    assert est.t_pair_for(1 << 20) == pytest.approx(0.015)
+    # the measurement and the legacy constant are both untouched
+    assert table.entries[0].t_pair_s == 0.01
+    assert est.t_pair_s == 0.1
+
+
+def test_calibration_state_resets_on_dataclasses_replace():
+    """Vehicles hand each job a dataclasses.replace() copy: calibration
+    state (scale, low streak) must start fresh per run."""
+    import dataclasses
+
+    est = AggregationEstimator(0.1)
+    job = _job(n=10)
+    est.calibrate(_observed_for(est, job, 1.0), job, n_updates=10)
+    fresh = dataclasses.replace(est)
+    assert fresh.calib_scale == 1.0
+    assert fresh._low_streak == 0

@@ -74,6 +74,84 @@ def test_quantize_roundtrip_error_bounded():
     assert err.max() <= float(s) * 0.5 + 1e-6
 
 
+# ---- tile-override parity (autotuned shapes) --------------------------------
+# the autotuner (repro.kernels.autotune) may pick any legal (bn, kb); parity
+# vs the oracles must hold for non-aligned n (not a multiple of bn), ragged
+# k (not a multiple of kb), and the zero-padding edges (exact multiples)
+
+NON_ALIGNED = [
+    # (k, n, bn, kb): n % bn != 0 and k % kb != 0
+    (3, 1500, 1024, 8),
+    (5, 9000, 4096, 16),
+    (13, 40_000, 16384, 8),
+]
+EXACT_FIT = [
+    # zero-length padding edge: both axes exact multiples of the tile
+    (8, 2048, 1024, 8),
+    (16, 32768, 16384, 16),
+]
+
+
+@pytest.mark.parametrize("k,n,bn,kb", NON_ALIGNED + EXACT_FIT)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_agg_tile_override_parity(k, n, bn, kb, dtype):
+    u = jax.random.normal(jax.random.PRNGKey(7), (k, n),
+                          jnp.float32).astype(dtype)
+    w = jnp.asarray(np.random.default_rng(1).dirichlet(np.ones(k)),
+                    jnp.float32)
+    got = fused_agg(u, w, bn=bn, kb=kb)
+    want = ref.fused_agg_ref(u, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("k,n,bn,kb", [
+    (5, 1500, 1024, 32),   # ragged both axes (kb_align=32 for int8)
+    (32, 4096, 2048, 32),  # exact fit, zero padding
+    (33, 70_000, 32768, 64),
+])
+def test_quant_agg_tile_override_parity(k, n, bn, kb):
+    q = jax.random.randint(jax.random.PRNGKey(4), (k, n), -127, 128,
+                           dtype=jnp.int8)
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (k,))) * 0.01
+    np.testing.assert_allclose(
+        quant_agg(q, s, bn=bn, kb=kb), ref.quant_agg_ref(q, s),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("n,bn", [
+    (1, 1024),        # all padding but one element
+    (5000, 2048),     # non-aligned
+    (8192, 8192),     # exact fit, zero padding, single grid step
+    (100_000, 32768),
+])
+@pytest.mark.parametrize("op", ["mean", "wsum"])
+def test_pair_fuse_bn_override_parity(n, bn, op):
+    ka, kb_ = jax.random.split(jax.random.PRNGKey(n))
+    a = jax.random.normal(ka, (n,), jnp.float32)
+    b = jax.random.normal(kb_, (n,), jnp.float32)
+    np.testing.assert_allclose(
+        pair_fuse(a, b, op=op, wa=0.3, wb=0.7, bn=bn),
+        ref.pair_fuse_ref(a, b, op, 0.3, 0.7),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_quantize_roundtrip_zero_and_tiny_inputs():
+    """Degenerate scales: all-zero input keeps scale 1 (no div-by-zero) and
+    round-trips exactly; a single-element update round-trips within s/2."""
+    q, s = quantize(jnp.zeros((257,)))
+    assert float(s) == 1.0
+    assert not np.asarray(q, np.float32).any()
+    x = jnp.asarray([3.7], jnp.float32)
+    q1, s1 = quantize(x)
+    assert abs(float(q1[0]) * float(s1) - 3.7) <= float(s1) * 0.5 + 1e-6
+
+
 # ---- properties ------------------------------------------------------------
 @given(
     k=st.integers(1, 12),
